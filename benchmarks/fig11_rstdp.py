@@ -1,0 +1,31 @@
+"""Paper Fig. 11: R-STDP pattern discrimination — mean expected reward
+converges to ~1 for both populations despite 40% pattern overlap."""
+import numpy as np
+
+
+def run(n_trials: int = 450):
+    from repro.core.hybrid import run_training
+
+    out, state, meta = run_training(n_trials=n_trials, seed=0)
+    even = np.asarray(meta["even"]) > 0
+    mr = out["mean_reward"]
+
+    def med(t, sel):
+        return float(np.median(mr[t, sel]))
+
+    print("# Fig. 11 reproduction — median <R> per population (40% overlap)")
+    for frac in (0.1, 0.25, 0.5, 0.75, 1.0):
+        t = int(n_trials * frac) - 1
+        print(f"trial {t:4d}: A-pop(even)={med(t, even):.3f} "
+              f"B-pop(odd)={med(t, ~even):.3f}")
+    n = 100
+    trail_e = float(np.mean(np.median(mr[-n:, :][:, even], axis=1)))
+    trail_o = float(np.mean(np.median(mr[-n:, :][:, ~even], axis=1)))
+    print(f"trailing-{n} mean of medians: even={trail_e:.3f} odd={trail_o:.3f}")
+    print("paper claim: 'converges to approximately one for all neurons'")
+    return dict(name="fig11_rstdp", trailing_even=trail_e,
+                trailing_odd=trail_o)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Render the roofline table from the dry-run results JSON (§Roofline)."""
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun.json"
+
+
+def _recompute(r):
+    """Re-derive MODEL_FLOPS-based metrics with current config code (the
+    stored values may predate fixes, e.g. MoE active-param counting)."""
+    from repro.config import SHAPES, get_arch
+    from repro.analysis.roofline import model_flops_for
+    try:
+        arch = get_arch(r["arch"])
+        shape = SHAPES[r["shape"]]
+        mf = model_flops_for(arch, shape)
+        r = dict(r)
+        r["model_flops_global"] = mf
+        hlo_global = r["flops_per_dev"] * r["n_devices"]
+        r["useful_flops_ratio"] = mf / max(hlo_global, 1.0)
+        r["mfu"] = mf / (r["n_devices"] * 197e12 * max(
+            r["t_compute"], r["t_memory"], r["t_collective"]))
+    except Exception:
+        pass
+    return r
+
+
+def fmt_row(r):
+    if r["status"] == "SKIP":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP — "
+                f"{r['reason']} | | | | | |")
+    if r["status"] != "OK":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | | | | | |")
+    if r["mesh"] == "2x16x16" and r.get("step_kind") in ("train", "prefill"):
+        # multi-pod rows compile via the production scan path: they prove
+        # the pod axis shards + fits (temp/collectives meaningful), but a
+        # while-body is costed once, so FLOP/byte terms are not roofline-
+        # valid — the roofline table is single-pod by design.
+        return ("| {arch} | {shape} | {mesh} | sharding-proof (scan): "
+                "temp {t:.1f} GiB, coll {c:.1f} GB/dev, compile OK "
+                "| | | | | |").format(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            t=r["temp_bytes"] / 2**30,
+            c=r["coll_sec"]["bytes_simple"] / 1e9)
+    r = _recompute(r)
+    tc, tm, tcoll = r["t_compute"], r["t_memory"], r["t_collective"]
+    probe = " (probed)" if r.get("depth_probe") else ""
+    return ("| {arch} | {shape} | {mesh}{probe} | {tc:.2e} | {tm:.2e} "
+            "| {tcoll:.2e} | {bn} | {ratio:.2f} | {mfu:.1%} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"], probe=probe,
+        tc=tc, tm=tm, tcoll=tcoll, bn=r["bottleneck"],
+        ratio=r["useful_flops_ratio"], mfu=r["mfu"])
+
+
+def run(path=RESULTS):
+    if not Path(path).exists():
+        print(f"(no dry-run results at {path} — run repro.launch.dryrun)")
+        return dict(name="roofline", cells=0)
+    recs = json.loads(Path(path).read_text())
+    print("| arch | shape | mesh | t_compute(s) | t_memory(s) | t_coll(s) "
+          "| bottleneck | 6ND/HLO | MFU@roofline |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    order = sorted(recs.values(), key=lambda r: (r["mesh"], r["arch"],
+                                                 r["shape"]))
+    for r in order:
+        print(fmt_row(r))
+    n_ok = sum(1 for r in recs.values() if r["status"] == "OK")
+    print(f"\n{n_ok} OK / {len(recs)} cells")
+    return dict(name="roofline", cells=n_ok)
+
+
+if __name__ == "__main__":
+    run()

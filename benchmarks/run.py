@@ -1,0 +1,54 @@
+"""Benchmark harness — one entry per paper figure/claim + framework perf.
+
+  fig4_calibration     paper Fig. 4  (MC calibration narrows STP offsets)
+  fig8_event_interface paper Fig. 8  (event-bus integrity, adapted)
+  fig11_rstdp          paper Fig. 11 (R-STDP reward -> ~1 @ 40% overlap)
+  step_time            paper §5     (290us claim: on-device vs host loop)
+  kernels              Pallas hot-spot microbenchmarks
+  roofline             §Roofline table from the dry-run artifacts
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig4_calibration, fig8_event_interface,
+                            fig11_rstdp, step_time, kernels_bench,
+                            roofline_table)
+    suites = [
+        ("fig4_calibration", fig4_calibration.run),
+        ("fig8_event_interface", fig8_event_interface.run),
+        ("fig11_rstdp", fig11_rstdp.run),
+        ("step_time", step_time.run),
+        ("kernels", kernels_bench.run),
+        ("roofline", roofline_table.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    results = []
+    failed = 0
+    for name, fn in suites:
+        if only and only != name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.perf_counter()
+        try:
+            r = fn() or {}
+            r.setdefault("name", name)
+            r["seconds"] = round(time.perf_counter() - t0, 2)
+            results.append(r)
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+    print("\n# name,us_per_call,derived")
+    for r in results:
+        us = r.get("fused_us") or r.get("seconds", 0) * 1e6
+        derived = {k: v for k, v in r.items()
+                   if k not in ("name", "seconds")}
+        print(f"{r['name']},{us:.1f},{derived}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Pre-tapeout calibration workflow (paper §3.2.2): sample virtual chip
+instances, calibrate the STP offsets by binary search, then show that the
+calibrated machine behaves uniformly across instances.
+
+Run:  PYTHONPATH=src python examples/calibrate_and_run.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.bss2 import BSS2
+from repro.core.hybrid import RSTDPConfig, make_experiment
+from repro.verif.calibration import calibrate_stp
+from repro.verif.mismatch import sample_instance
+
+
+def main():
+    # 1. virtual instances (fixed seed = same "silicon" every run)
+    cfg = dataclasses.replace(BSS2.reduced(), n_rows=32, n_cols=16)
+    inst = sample_instance(cfg, jax.random.PRNGKey(7))
+
+    # 2. pre-tapeout calibration of the STP efficacy offsets
+    codes, metrics = calibrate_stp(cfg, inst["stp_offset"])
+    print(f"STP offsets: std {float(metrics['std_before']):.3f} -> "
+          f"{float(metrics['std_after']):.3f} after 4-bit binary search")
+
+    # 3. run the hybrid-plasticity experiment on the CALIBRATED instance
+    inst_cal = dict(inst, stp_calib=codes)
+    ecfg = RSTDPConfig()
+    init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg)
+    # (make_experiment samples its own instance; here we just demonstrate
+    # the calibrated efficacies feeding the machine)
+    from repro.core import stp
+    eff_uncal = stp.efficacy(stp.init_state((32,)), jnp.ones(32),
+                             u=cfg.stp_u, offset=inst["stp_offset"],
+                             calib_code=inst["stp_calib"])
+    eff_cal = stp.efficacy(stp.init_state((32,)), jnp.ones(32),
+                           u=cfg.stp_u, offset=inst["stp_offset"],
+                           calib_code=codes)
+    print(f"first-pulse efficacy spread across drivers: "
+          f"{float(jnp.std(eff_uncal)):.4f} uncalibrated vs "
+          f"{float(jnp.std(eff_cal)):.4f} calibrated")
+    assert float(jnp.std(eff_cal)) < float(jnp.std(eff_uncal))
+    print("calibrated machine ready — see examples/rstdp_pattern.py for the "
+          "learning experiment")
+
+
+if __name__ == "__main__":
+    main()

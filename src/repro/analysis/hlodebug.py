@@ -1,0 +1,61 @@
+"""HLO inspection helpers for the perf hillclimb.
+
+``top_buffers`` ranks result tensors in an optimized HLO module by size —
+the fastest way to find what is *actually* replicated/materialized when the
+memory term looks wrong.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+
+from repro.analysis.roofline import _SHAPE_RE, _DTYPE_BYTES
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\S+))\s+([\w\-]+)\(")
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def top_buffers(hlo_text: str, n: int = 30):
+    """Largest result tensors: (bytes, op_kind, type, count)."""
+    agg = defaultdict(lambda: [0, 0])  # (op_kind, type) -> [count, bytes_each]
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        _, type_str, kind = m.groups()
+        b = _bytes_of(type_str)
+        if b < (1 << 20):
+            continue
+        key = (kind, type_str[:120])
+        agg[key][0] += 1
+        agg[key][1] = b
+    rows = sorted(((cnt * b, cnt, b, kind, t) for (kind, t), (cnt, b) in agg.items()),
+                  reverse=True)
+    return rows[:n]
+
+
+def print_top_buffers(hlo_text: str, n: int = 30):
+    for total, cnt, b, kind, t in top_buffers(hlo_text, n):
+        print(f"{total/2**30:8.2f} GiB total | {cnt:5d} x {b/2**20:9.1f} MiB | "
+              f"{kind:24s} | {t}")
+
+
+def bytes_by_op(hlo_text: str, n: int = 20):
+    agg = Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        _, type_str, kind = m.groups()
+        agg[kind] += _bytes_of(type_str)
+    return agg.most_common(n)

@@ -1,0 +1,6 @@
+"""The paper's C1 contribution: a behavioural machine model of the
+BrainScaleS-2 ASIC — accelerated analog neuromorphic core (AdEx neurons,
+6-bit synapse array, short-term plasticity, correlation sensors, CADC)
+tightly coupled to a row-parallel plasticity processor (PPU)."""
+from repro.core.anncore import AnnCore, AnnCoreState  # noqa: F401
+from repro.core.ppu import VectorUnit  # noqa: F401

@@ -1,0 +1,88 @@
+"""AdEx / LIF neuron dynamics (paper §2.1, Eqs. for V and w).
+
+  C dV/dt = -g_L (V - E_L) + g_L Δ_T exp((V - V_T)/Δ_T) - w + I
+  τ_w dw/dt = a (V - E_L) - w
+
+Integration: exponential Euler on the leak/adaptation terms, explicit on
+the exponential current (clipped — the silicon circuit saturates too).
+Spike condition V > V_thres + spike latch -> reset + refractory hold, as in
+the full-custom digital neuron backend.
+
+All arrays broadcast over an arbitrary leading instance/batch shape:
+states are [..., N] for N neurons.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class NeuronState(NamedTuple):
+    v: jnp.ndarray           # membrane potential [mV]
+    w: jnp.ndarray           # adaptation current [pA]
+    i_exc: jnp.ndarray       # excitatory synaptic current state [pA]
+    i_inh: jnp.ndarray       # inhibitory synaptic current state [pA]
+    refrac: jnp.ndarray      # remaining refractory time [us]
+
+
+def init_state(shape, params) -> NeuronState:
+    z = jnp.zeros(shape, jnp.float32)
+    return NeuronState(v=jnp.broadcast_to(params["e_leak"], shape).astype(jnp.float32),
+                       w=z, i_exc=z, i_inh=z, refrac=z)
+
+
+SPIKE_CLAMP = 30.0   # mV above which the exponential term is clamped
+
+
+def step(state: NeuronState, i_syn_exc, i_syn_inh, params: Dict, dt: float,
+         adex: bool = True):
+    """One dt step. i_syn_*: charge injected this step [pA*us / us = pA].
+
+    Returns (new_state, spikes[...,N] float32 in {0,1}).
+    """
+    g_l = params["g_leak"]
+    c = params["c_mem"]
+    tau_m = c / g_l
+
+    # synaptic currents: exponential kernels, pulses add instantaneously
+    de = jnp.exp(-dt / params["tau_syn_exc"])
+    di = jnp.exp(-dt / params["tau_syn_inh"])
+    i_exc = state.i_exc * de + i_syn_exc
+    i_inh = state.i_inh * di + i_syn_inh
+
+    i_total = i_exc - i_inh - state.w
+
+    # exponential escape current (clamped like the saturating circuit)
+    if adex:
+        arg = jnp.clip((state.v - params["v_thres"]) / params["delta_t"],
+                       -20.0, 3.0)
+        i_exp = g_l * params["delta_t"] * jnp.exp(arg)
+    else:
+        i_exp = 0.0
+
+    v_inf = params["e_leak"] + (i_total + i_exp) / g_l
+    alpha = jnp.exp(-dt / tau_m)
+    v = v_inf + (state.v - v_inf) * alpha
+
+    # adaptation (exponential Euler towards a(V - E_L))
+    w_inf = params["a"] * (state.v - params["e_leak"])
+    aw = jnp.exp(-dt / params["tau_w"])
+    w = w_inf + (state.w - w_inf) * aw
+
+    # refractory clamp
+    in_refrac = state.refrac > 0.0
+    v = jnp.where(in_refrac, params["e_reset"], v)
+    w = jnp.where(in_refrac, state.w, w)
+
+    # spike detection: threshold crossing ends the integration step
+    spike_v = params["v_thres"] + jnp.where(adex, 2.0 * params["delta_t"], 0.0)
+    spikes = (v > spike_v) & ~in_refrac
+    v = jnp.where(spikes, params["e_reset"], v)
+    w = jnp.where(spikes, w + params["b"], w)
+    refrac = jnp.where(spikes, params["tau_refrac"],
+                       jnp.maximum(state.refrac - dt, 0.0))
+
+    new = NeuronState(v=v, w=w, i_exc=i_exc, i_inh=i_inh, refrac=refrac)
+    return new, spikes.astype(jnp.float32)

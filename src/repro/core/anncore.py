@@ -1,0 +1,113 @@
+"""The assembled analog network core (anncore).
+
+One object holds the full machine state (neurons, synapses, STP, correlation
+sensors) and ``run`` integrates it over a time window with ``lax.scan`` —
+the accelerated-time emulation. Everything broadcasts over a leading
+instance dim, so a *batch of independent chips* (virtual instances for MC
+calibration, or parallel experiment seeds) runs as one vectorized program —
+that is how the machine model maps onto the TPU mesh (instances over
+``data``, synapse columns over ``model``).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.bss2 import BSS2Config
+from repro.core import adex, correlation, stp, synapse
+
+
+class AnnCoreState(NamedTuple):
+    neuron: adex.NeuronState
+    stp: stp.STPState
+    corr: correlation.CorrelationState
+    syn: synapse.SynapseArray
+    rate_counters: jnp.ndarray    # [..., C] spike counts since last PPU read
+
+
+class AnnCore:
+    """Stateless integrator bound to a config + a virtual instance.
+
+    ``inst`` carries the mismatch realisation (see repro.verif.mismatch):
+      neuron_params: dict of [..., C] arrays
+      weight_gain:   [..., C]   synaptic DAC gain spread
+      stp_offset:    [..., R]   driver efficacy offset (Fig. 4)
+      stp_calib:     [..., R]   4-bit trim codes
+      cadc_offset/cadc_gain: [..., C]
+    """
+
+    def __init__(self, cfg: BSS2Config, inst: Dict):
+        self.cfg = cfg
+        self.inst = inst
+
+    def init_state(self, prefix=()) -> AnnCoreState:
+        cfg = self.cfg
+        r, c = cfg.n_rows, cfg.n_cols
+        return AnnCoreState(
+            neuron=adex.init_state((*prefix, c), self.inst["neuron_params"]),
+            stp=stp.init_state((*prefix, r)),
+            corr=correlation.init_state(prefix, r, c),
+            syn=synapse.init_array(prefix, r, c),
+            rate_counters=jnp.zeros((*prefix, c), jnp.float32),
+        )
+
+    def step(self, state: AnnCoreState, row_spikes, row_addr, ext_current=0.0):
+        """One dt of the full core.
+
+        row_spikes: [..., R] float {0,1} events entering the drivers;
+        row_addr:   [..., R] int8 event addresses;
+        """
+        cfg = self.cfg
+        dt = cfg.dt
+        eff = stp.efficacy(state.stp, row_spikes, u=cfg.stp_u,
+                           offset=self.inst["stp_offset"],
+                           calib_code=self.inst["stp_calib"])
+        new_stp = stp.update(state.stp, row_spikes, u=cfg.stp_u,
+                             tau_rec=cfg.stp_tau_rec, dt=dt)
+
+        # signed rows: even rows excitatory, odd rows inhibitory (Dale)
+        i_cols_exc = synapse.synaptic_current(
+            state.syn.weights[..., 0::2, :], state.syn.addresses[..., 0::2, :],
+            eff[..., 0::2], row_addr[..., 0::2], self.inst["weight_gain"])
+        i_cols_inh = synapse.synaptic_current(
+            state.syn.weights[..., 1::2, :], state.syn.addresses[..., 1::2, :],
+            eff[..., 1::2], row_addr[..., 1::2], self.inst["weight_gain"])
+
+        new_neuron, out_spikes = adex.step(
+            state.neuron, i_cols_exc * 60.0 + ext_current, i_cols_inh * 60.0,
+            self.inst["neuron_params"], dt, adex=cfg.neuron.adex)
+
+        # sensor time constants ~ tau_syn: long traces let consecutive
+        # pattern bursts sample each other's post-activity and flip the
+        # eligibility sign (measured: elig[A->even] < 0 on A-trials with
+        # 4x tau — see EXPERIMENTS.md, R-STDP bring-up log)
+        new_corr = correlation.update(
+            state.corr, row_spikes, out_spikes,
+            tau_pre=cfg.neuron.tau_syn_exc,
+            tau_post=cfg.neuron.tau_syn_exc, dt=dt)
+
+        new_state = AnnCoreState(
+            neuron=new_neuron, stp=new_stp, corr=new_corr, syn=state.syn,
+            rate_counters=state.rate_counters + out_spikes)
+        return new_state, out_spikes
+
+    def run(self, state: AnnCoreState, row_spikes_t, row_addr_t,
+            record_v: bool = False, unroll: int = 1):
+        """Integrate a [T, ..., R] event stream. Returns (state, outputs).
+
+        outputs: dict(spikes=[T, ..., C], v=[T, ..., C] if record_v)
+        """
+        def body(s, xs):
+            sp, ad = xs
+            s2, out = self.step(s, sp, ad)
+            rec = (out, s2.neuron.v) if record_v else (out,)
+            return s2, rec
+
+        state, recs = jax.lax.scan(body, state, (row_spikes_t, row_addr_t),
+                                   unroll=unroll)
+        out = dict(spikes=recs[0])
+        if record_v:
+            out["v"] = recs[1]
+        return state, out

@@ -1,0 +1,25 @@
+"""Column-parallel ADC (CADC) model (paper §2.2).
+
+Digitizes analog observables (correlation capacitors, membrane voltages)
+column-parallel at 8 bit, with per-column offset and gain mismatch — the
+quantities the PPU actually sees. Mismatch terms come from the virtual
+instance (repro.verif.mismatch)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def digitize(x, *, offset, gain, bits: int = 8, in_scale: float = 1.0):
+    """x: [..., C] or [..., R, C] analog value; offset/gain: [..., C].
+
+    Returns int32 codes in [0, 2^bits - 1].
+    """
+    lsb = (2 ** bits - 1)
+    code = x * (gain * in_scale) + offset
+    return jnp.clip(jnp.round(code), 0, lsb).astype(jnp.int32)
+
+
+def dedigitize(code, *, offset, gain, in_scale: float = 1.0):
+    """Inverse transform with the *nominal* calibration (what the PPU's
+    calibration table would apply)."""
+    return (code.astype(jnp.float32) - offset) / (gain * in_scale)

@@ -1,0 +1,49 @@
+"""Capacitive memory (analog parameter storage) model.
+
+Each neuron has its own copy of every analog parameter ("massively
+integrated analog parameter storage", paper §2.1). Values are stored as
+nominal + per-instance deviation; the deviation comes from the fixed-seed
+mismatch model in ``repro.verif.mismatch`` (virtual instances, §3.2.2).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.bss2 import BSS2Config
+
+# parameters stored per neuron column (paper: 8 voltages + 16 currents;
+# we model the subset that drives the behavioural equations)
+NEURON_PARAMS = (
+    "g_leak", "e_leak", "v_thres", "e_reset", "v_exp", "delta_t",
+    "tau_w", "a", "b", "tau_refrac", "tau_syn_exc", "tau_syn_inh", "c_mem",
+)
+
+
+def nominal(cfg: BSS2Config) -> Dict[str, jnp.ndarray]:
+    """Nominal (datasheet) parameter set, broadcast per neuron."""
+    n = cfg.n_cols  # neurons == synapse columns
+    p = cfg.neuron
+    out = {}
+    for name in NEURON_PARAMS:
+        out[name] = jnp.full((n,), getattr(p, name), jnp.float32)
+    return out
+
+
+def apply_capmem_mismatch(params: Dict[str, jnp.ndarray], key,
+                          cfg: BSS2Config) -> Dict[str, jnp.ndarray]:
+    """Per-cell storage spread: every capmem cell deviates multiplicatively
+    (sigma_capmem) on top of the circuit-specific mismatch terms."""
+    sig = cfg.mismatch.sigma_capmem
+    keys = jax.random.split(key, len(params))
+    out = {}
+    for (name, v), k in zip(sorted(params.items()), keys):
+        mult = 1.0 + sig * jax.random.normal(k, v.shape)
+        # voltages deviate additively (mV), conductances multiplicatively
+        if name in ("e_leak", "v_thres", "e_reset", "v_exp"):
+            out[name] = v + cfg.mismatch.sigma_v_thres * jax.random.normal(k, v.shape)
+        else:
+            out[name] = v * mult
+    return out

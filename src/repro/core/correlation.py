@@ -1,0 +1,51 @@
+"""Analog correlation sensors in each synapse (paper §2.1).
+
+Each synapse accumulates causal (pre-before-post) and anti-causal traces on
+storage capacitors, later digitized by the CADC for hybrid plasticity.
+
+Implementation: exponentially decaying pre/post spike traces; a post spike
+adds the row-wise pre-trace to the causal accumulator (outer product), a pre
+spike adds the column-wise post-trace to the anti-causal accumulator. This
+row x col outer-product accumulate is the second kernel hot-spot
+(``repro.kernels.corr``); this module is its jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class CorrelationState(NamedTuple):
+    trace_pre: jnp.ndarray    # [..., R] presynaptic trace
+    trace_post: jnp.ndarray   # [..., C] postsynaptic trace
+    a_causal: jnp.ndarray     # [..., R, C] on-capacitor accumulation
+    a_acausal: jnp.ndarray    # [..., R, C]
+
+
+def init_state(shape_prefix, rows, cols) -> CorrelationState:
+    z = jnp.zeros
+    return CorrelationState(
+        trace_pre=z((*shape_prefix, rows), jnp.float32),
+        trace_post=z((*shape_prefix, cols), jnp.float32),
+        a_causal=z((*shape_prefix, rows, cols), jnp.float32),
+        a_acausal=z((*shape_prefix, rows, cols), jnp.float32),
+    )
+
+
+def update(state: CorrelationState, pre_spikes, post_spikes, *,
+           tau_pre: float, tau_post: float, dt: float, eta: float = 1.0,
+           sat: float = 1023.0) -> CorrelationState:
+    """One dt step. pre_spikes: [..., R]; post_spikes: [..., C]."""
+    tp = state.trace_pre * jnp.exp(-dt / tau_pre) + pre_spikes
+    tq = state.trace_post * jnp.exp(-dt / tau_post) + post_spikes
+    # causal: post spike samples the pre trace (outer product)
+    a_c = state.a_causal + eta * tp[..., :, None] * post_spikes[..., None, :]
+    # anti-causal: pre spike samples the post trace
+    a_a = state.a_acausal + eta * pre_spikes[..., :, None] * tq[..., None, :]
+    # storage capacitors saturate
+    return CorrelationState(
+        trace_pre=tp, trace_post=tq,
+        a_causal=jnp.minimum(a_c, sat),
+        a_acausal=jnp.minimum(a_a, sat),
+    )

@@ -1,0 +1,314 @@
+"""Hybrid plasticity: the fused on-device experiment step (paper §2.2, §5).
+
+The defining property of BrainScaleS-2 is that the learning rule runs *on*
+the accelerator: the PPU reads rate counters and correlation sensors, joins
+them with the reward, and writes 6-bit weights — no host round-trip. The
+paper reports 290 us/training step once host transfers are removed (§5).
+
+Here the entire trial — environment (input pattern generation), anncore
+emulation, observable digitization, R-STDP update — is ONE jitted function
+(`make_trial_step`). The host-in-the-loop baseline (`host_loop_trial`)
+pulls observables to the host between phases, reproducing the comparison
+the paper makes.
+
+The experiment is §5's pattern-discrimination task: 16 inputs with Poisson
+background, patterns A/B on 5 (possibly overlapping) channels; even neurons
+are rewarded for firing on A, odd neurons on B.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.bss2 import BSS2Config, BSS2
+from repro.core import rules, synapse
+from repro.core.anncore import AnnCore, AnnCoreState
+from repro.core.ppu import VectorUnit
+from repro.verif.mismatch import sample_instance
+
+
+@dataclass(frozen=True)
+class RSTDPConfig:
+    n_inputs: int = 16
+    n_neurons: int = 16
+    pattern_size: int = 5
+    overlap: float = 0.4          # fraction of shared channels (paper: 40%)
+    trial_steps: int = 256        # dt steps per trial
+    bg_prob: float = 0.008        # background spike prob / channel / dt
+    pattern_repeats: int = 4      # pattern burst repetitions per trial
+    eta: float = 16.0
+    eta_homeo: float = 0.4        # escape term only — must stay well below
+                                  # the eligibility term or it pins the
+                                  # network at the firing threshold
+    gamma: float = 0.3            # paper Eq. 2
+    noise: float = 0.1            # random-walk xi (spike-level exploration
+                                  # comes from the Poisson background)
+    w_init: float = 20.0
+    burst_width: int = 2          # consecutive dt steps per pattern burst
+    fire_thresh: float = 1.0      # spikes to count as "fired"
+
+
+class ExperimentState(NamedTuple):
+    core: AnnCoreState
+    w_signed: jnp.ndarray         # PPU-resident signed weights [.., I, C]
+    mean_reward: jnp.ndarray      # [.., C]
+    key: jnp.ndarray
+
+
+def _patterns(ecfg: RSTDPConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """Channel sets for patterns A and B with the requested overlap."""
+    k = ecfg.pattern_size
+    n_shared = int(round(ecfg.overlap * k))
+    a = list(range(k))
+    b = a[:n_shared] + list(range(k, 2 * k - n_shared))
+    mask_a = np.zeros(ecfg.n_inputs, np.float32)
+    mask_b = np.zeros(ecfg.n_inputs, np.float32)
+    mask_a[a] = 1
+    mask_b[b] = 1
+    return mask_a, mask_b
+
+
+def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
+                    instance_key=None, prefix=()):
+    """Build the experiment closure set. Returns (init_fn, trial_fn, meta).
+
+    The machine uses 2 rows per input (exc/inh pair, Dale's law: the PPU
+    writes |w| to the row matching the sign — paper §5).
+    """
+    if cfg is None:
+        cfg = dataclasses.replace(
+            BSS2.reduced(), n_rows=2 * ecfg.n_inputs, n_cols=ecfg.n_neurons)
+    assert cfg.n_rows == 2 * ecfg.n_inputs and cfg.n_cols == ecfg.n_neurons
+    mask_a, mask_b = _patterns(ecfg)
+    mask_a, mask_b = jnp.asarray(mask_a), jnp.asarray(mask_b)
+    even = (jnp.arange(ecfg.n_neurons) % 2 == 0).astype(jnp.float32)
+
+    if instance_key is None:
+        instance_key = jax.random.PRNGKey(7)
+    inst = sample_instance(cfg, instance_key, prefix)
+    core = AnnCore(cfg, inst)
+    ppu = VectorUnit(cfg, inst)
+
+    def init(key) -> ExperimentState:
+        st = core.init_state(prefix)
+        w0 = ecfg.w_init * jnp.ones((*prefix, ecfg.n_inputs, ecfg.n_neurons))
+        st = st._replace(syn=_write_signed(st.syn, w0))
+        return ExperimentState(
+            core=st, w_signed=w0,
+            mean_reward=jnp.zeros((*prefix, ecfg.n_neurons)), key=key)
+
+    def _write_signed(syn, w_signed):
+        w_exc = jnp.clip(w_signed, 0, None)
+        w_inh = jnp.clip(-w_signed, 0, None)
+        w_rows = jnp.stack([w_exc, w_inh], axis=-3)   # [.., 2, I, C]
+        shape = (*w_signed.shape[:-2], 2 * ecfg.n_inputs, ecfg.n_neurons)
+        w_rows = w_rows.transpose(
+            *range(w_signed.ndim - 2), -2, -3, -1).reshape(shape)
+        return syn._replace(weights=synapse.quantize_weight(w_rows))
+    _write_signed.__doc__ = "interleave exc/inh rows: row 2i exc, 2i+1 inh"
+
+    def _gen_events(key, stim):
+        """Event stream [T, .., 2I] for stimulus in {0:none, 1:A, 2:B}."""
+        kb, kp = jax.random.split(key)
+        T = ecfg.trial_steps
+        bg = (jax.random.uniform(kb, (T, *prefix, ecfg.n_inputs))
+              < ecfg.bg_prob).astype(jnp.float32)
+        # pattern: synchronized bursts on the pattern channels
+        burst_times = jnp.linspace(T // 8, T - T // 8,
+                                   ecfg.pattern_repeats).astype(jnp.int32)
+        t_idx = jnp.arange(T)
+        dt_to_burst = t_idx[:, None] - burst_times[None, :]
+        is_burst = jnp.any((dt_to_burst >= 0)
+                           & (dt_to_burst < ecfg.burst_width), axis=1)
+        pat_mask = jnp.where(stim == 1, mask_a,
+                             jnp.where(stim == 2, mask_b,
+                                       jnp.zeros_like(mask_a)))
+        pat = (is_burst.reshape(T, *([1] * len(prefix)), 1)
+               * pat_mask.reshape(*([1] * (1 + len(prefix))), -1))
+        ch = jnp.clip(bg + pat, 0, 1)
+        # input i drives rows 2i (exc) and 2i+1 (inh) with the same events
+        ev = jnp.repeat(ch, 2, axis=-1)
+        addr = jnp.zeros(ev.shape, jnp.int8)
+        return ev, addr
+
+    def _reward(rates, stim):
+        fired = (rates >= ecfg.fire_thresh).astype(jnp.float32)
+        own_shown = jnp.where(stim == 1, even,
+                              jnp.where(stim == 2, 1.0 - even,
+                                        jnp.zeros_like(even)))
+        return jnp.where(own_shown > 0, fired, 1.0 - fired)
+
+    def trial(state: ExperimentState, stim) -> Tuple[ExperimentState, Dict]:
+        """One fused training trial. stim: int32 in {0,1,2} (the PPU's
+        simulated environment picks it upstream or it is scanned over)."""
+        key, k_ev, k_rule = jax.random.split(state.key, 3)
+        ev, addr = _gen_events(k_ev, stim)
+        cs, _ = core.run(state.core, ev, addr)
+        rates = cs.rate_counters
+        r = _reward(rates, stim)
+
+        # PPU: R-STDP on the signed PPU weights, using exc-row eligibility
+        cs2, rule_state, obs = ppu.apply_rule(
+            _signed_rule, cs,
+            dict(mean_reward=state.mean_reward, key=k_rule,
+                 w_signed=state.w_signed),
+            reward=r)
+        new = ExperimentState(core=cs2, w_signed=rule_state["w_signed"],
+                              mean_reward=rule_state["mean_reward"], key=key)
+        elig = (obs["causal"][..., 0::2, :]
+                - obs["acausal"][..., 0::2, :]).astype(jnp.float32) / 255.0
+        metrics = dict(reward=r, mean_reward=rule_state["mean_reward"],
+                       rates=rates, stim=stim, elig=elig,
+                       w=rule_state["w_signed"])
+        return new, metrics
+
+    def _signed_rule(w_rows, obs, rule_state, *, reward):
+        """R-STDP on the signed input-level weights; rewrite both rows."""
+        causal = obs["causal"][..., 0::2, :]       # exc rows carry the
+        acausal = obs["acausal"][..., 0::2, :]     # pre-spike correlations
+        elig = (causal - acausal).astype(jnp.float32) / 255.0
+        mod = (reward - rule_state["mean_reward"])[..., None, :]
+        key, sub = jax.random.split(rule_state["key"])
+        xi = ecfg.noise * jax.random.normal(sub, rule_state["w_signed"].shape)
+        dw = ecfg.eta * mod * elig
+        # homeostatic punishment (PPU rate counters): firing when the trial
+        # earned no reward uniformly depresses the neuron's whole column.
+        # Self-limiting: once the neuron only fires on its own pattern,
+        # (1 - R) * fired == 0 and the term vanishes. Without it the
+        # excitatory drive rails at w_max (see R-STDP bring-up log).
+        # fired & unrewarded -> uniform depression; silent & unrewarded
+        # (own pattern missed) -> uniform potentiation. Fixed point: fire
+        # exactly on the own pattern (then (1-R) == 0 and the term is gone).
+        fired = (obs["rates"] >= ecfg.fire_thresh).astype(jnp.float32)
+        dw = dw + ecfg.eta_homeo * (
+            (1.0 - reward) * (1.0 - 2.0 * fired))[..., None, :]
+        w_signed = rule_state["w_signed"] + dw + xi
+        w_signed = jnp.clip(w_signed, -45.0, 45.0)
+        mean_r = rule_state["mean_reward"] + ecfg.gamma * (
+            reward - rule_state["mean_reward"])                 # Eq. 2
+        new_syn = _write_signed(
+            synapse.SynapseArray(w_rows.astype(jnp.int8),
+                                 jnp.zeros_like(w_rows, dtype=jnp.int8)),
+            w_signed)
+        return new_syn.weights.astype(jnp.float32), dict(
+            mean_reward=mean_r, key=key, w_signed=w_signed)
+
+    meta = dict(cfg=cfg, ecfg=ecfg, inst=inst, core=core, ppu=ppu,
+                mask_a=mask_a, mask_b=mask_b, even=even)
+    return init, trial, meta
+
+
+def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
+                 seed: int = 0, cfg: BSS2Config = None, fused: bool = True):
+    """Full §5 experiment. Returns the metrics history (stacked)."""
+    init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg,
+                                        instance_key=jax.random.PRNGKey(seed))
+    state = init(jax.random.PRNGKey(seed + 1))
+    stims = jnp.asarray(np.resize([1, 2, 0], n_trials), jnp.int32)
+
+    if fused:
+        jtrial = jax.jit(trial)
+        hist = []
+        for i in range(n_trials):
+            state, m = jtrial(state, stims[i])
+            hist.append(m)
+    else:
+        hist = []
+        for i in range(n_trials):
+            state, m = host_loop_trial(trial, state, stims[i])
+            hist.append(m)
+    out = {k: np.stack([np.asarray(h[k]) for h in hist]) for k in hist[0]}
+    out["w_signed_final"] = np.asarray(state.w_signed)
+    return out, state, meta
+
+
+def host_loop_trial(trial, state, stim):
+    """Host-in-the-loop baseline: every observable crosses the host boundary
+    (device_get / device_put) before the update — the slow path the paper's
+    hybrid architecture eliminates."""
+    state = jax.tree.map(lambda x: jax.device_put(jax.device_get(x)), state)
+    new, m = jax.jit(trial)(state, stim)
+    m = {k: jax.device_get(v) for k, v in m.items()}
+    return new, m
+
+
+# ---------------------------------------------------------------------------
+# Dry-run cell for --arch bss2: pod-scale batched hybrid-plasticity step
+# ---------------------------------------------------------------------------
+
+def lower_bss2_cell(shape, ctx, mesh_cfg):
+    """Lower the fused trial step for a *fleet* of full-size BSS-2 machine
+    instances: instances over the data axes, synapse columns over model.
+
+    This is the scale-up the paper's Discussion anticipates (several
+    anncore+PPU blocks per reticle): shape.global_batch independent chips
+    learning in parallel, one jitted program.
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.config import SHAPES
+    from repro.analysis.roofline import RooflineReport, collective_seconds, \
+        parse_collectives, hbm_bytes_estimate
+
+    n_inst = max(shape.global_batch, 16)
+    cfg = BSS2  # full-size: 256 rows x 512 cols
+    ecfg = RSTDPConfig(n_inputs=cfg.n_rows // 2, n_neurons=cfg.n_cols,
+                       pattern_size=24, trial_steps=128)
+    init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg, prefix=(n_inst,))
+
+    def batched_trial(state, stim):
+        return trial(state, stim)
+
+    mesh = ctx.mesh
+    state_abs = jax.eval_shape(init, jax.random.PRNGKey(0))
+
+    def spec_for(path_leaf):
+        # instances (leading dim n_inst) over data axes; trailing synapse
+        # col dim over model where divisible
+        shp = path_leaf.shape
+        parts = [None] * len(shp)
+        data_ax = tuple(mesh_cfg.data_axes)
+        if len(shp) >= 1 and shp[0] == n_inst:
+            parts[0] = data_ax
+        if len(shp) >= 1 and shp[-1] == cfg.n_cols:
+            parts[-1] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    st_sh = jax.tree.map(spec_for, state_abs)
+    with mesh:
+        fn = jax.jit(batched_trial,
+                     in_shardings=(st_sh, NamedSharding(mesh, P())),
+                     donate_argnums=(0,))
+        lowered = fn.lower(state_abs, jax.ShapeDtypeStruct((), jnp.int32))
+        compiled = lowered.compile()
+
+    txt = compiled.as_text()
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    colls = parse_collectives(txt)
+    hbm = hbm_bytes_estimate(txt)
+    # MODEL_FLOPS for the machine model: synapse matmul + neuron updates
+    flops_trial = (2 * cfg.n_rows * cfg.n_cols       # event matmul
+                   + 40 * cfg.n_cols                 # neuron/corr updates
+                   + 4 * cfg.n_rows * cfg.n_cols     # correlation outer
+                   ) * ecfg.trial_steps * n_inst
+    from repro.config import get_arch
+    rep = RooflineReport(
+        arch="bss2", shape=shape.name,
+        mesh="2x16x16" if mesh_cfg.multi_pod else "16x16",
+        flops_per_dev=float(ca.get("flops", 0.0)),
+        bytes_per_dev=float(ca.get("bytes accessed", 0.0)),
+        hbm_bytes_per_dev=float(hbm["rw"]), hbm_by_kind=hbm["by_kind"],
+        transcendentals=float(ca.get("transcendentals", 0.0)),
+        coll=colls, coll_sec=collective_seconds(colls),
+        temp_bytes=int(ma.temp_size_in_bytes),
+        arg_bytes=int(ma.argument_size_in_bytes),
+        out_bytes=int(ma.output_size_in_bytes),
+        model_flops_global=float(flops_trial),
+        n_devices=mesh_cfg.n_devices, step_kind="train")
+    return rep, compiled

@@ -1,0 +1,67 @@
+"""Plasticity Processing Unit — vector-unit semantics (paper §2.2).
+
+The silicon PPU is a Power-ISA scalar core + a SIMD vector unit whose lanes
+are hard-wired to synapse-array columns: plasticity kernels read synapse
+rows and CADC casuals row-by-row, compute in fixed point, and write 6-bit
+weights back through the full-custom SRAM controller.
+
+Here the vector unit is a *row-parallel rule VM*: a plasticity rule is a
+pure function over (weights_row, observables_row, rule state) applied to
+all rows (and all columns within a row — the lanes) at once. Weight writes
+saturate to 6 bit like the hardware store. The paper's hybrid-plasticity
+property — learning runs on-device with no host round-trip — corresponds to
+the whole (anncore run + PPU update) being ONE jitted program.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cadc, synapse
+from repro.configs.bss2 import BSS2Config
+
+
+class VectorUnit:
+    def __init__(self, cfg: BSS2Config, inst: Dict):
+        self.cfg = cfg
+        self.inst = inst
+
+    # -- observable reads ------------------------------------------------
+    def read_correlation(self, corr_state, reset: bool = True):
+        """CADC-digitized causal/anti-causal codes [..., R, C] (int32)."""
+        oc = self.inst["cadc_offset"][..., None, :]
+        gc = self.inst["cadc_gain"][..., None, :]
+        qc = cadc.digitize(corr_state.a_causal, offset=oc, gain=gc,
+                           bits=self.cfg.cadc_bits, in_scale=8.0)
+        qa = cadc.digitize(corr_state.a_acausal, offset=oc, gain=gc,
+                           bits=self.cfg.cadc_bits, in_scale=8.0)
+        return qc, qa
+
+    def read_rates(self, state):
+        return state.rate_counters
+
+    # -- weight write-back -----------------------------------------------
+    def write_weights(self, syn: synapse.SynapseArray, w_new
+                      ) -> synapse.SynapseArray:
+        return syn._replace(weights=synapse.quantize_weight(w_new))
+
+    # -- rule application --------------------------------------------------
+    def apply_rule(self, rule: Callable, state, rule_state: Dict, **kw):
+        """rule(weights_f32, observables, rule_state, **kw) ->
+        (new_weights_f32, new_rule_state). Row-parallel by construction —
+        all tensors are [..., R, C]."""
+        qc, qa = self.read_correlation(state.corr)
+        obs = dict(causal=qc, acausal=qa, rates=self.read_rates(state))
+        w = state.syn.weights.astype(jnp.float32)
+        w_new, rule_state = rule(w, obs, rule_state, **kw)
+        syn = self.write_weights(state.syn, w_new)
+        new_state = state._replace(
+            syn=syn,
+            rate_counters=jnp.zeros_like(state.rate_counters),
+            corr=state.corr._replace(
+                a_causal=jnp.zeros_like(state.corr.a_causal),
+                a_acausal=jnp.zeros_like(state.corr.a_acausal)),
+        )
+        return new_state, rule_state, obs

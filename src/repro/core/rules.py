@@ -1,0 +1,53 @@
+"""Plasticity rules executed by the PPU vector unit.
+
+R-STDP (the paper's §5 experiment, Eqs. 2-3):
+
+    <R_i>  <-  <R_i> + gamma (R_i - <R_i>)                      (2)
+    dw_ij  =   eta * (R_i - <R_i>) * e_ij + xi_ij               (3)
+
+with e_ij the causal STDP eligibility from the analog correlation sensors
+and xi a small random walk. Also provided: plain additive STDP and a
+rate-homeostasis rule (both used in tests and ablations).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def rstdp(weights, obs, rule_state, *, reward, eta: float = 0.5,
+          gamma: float = 0.3, noise: float = 0.3, key=None):
+    """Reward-modulated STDP (paper Eqs. 2-3).
+
+    weights: [..., R, C] f32; obs['causal'/'acausal']: [..., R, C] int codes;
+    reward: [..., C] instantaneous binary reward per neuron (column);
+    rule_state: dict(mean_reward=[..., C], key=PRNGKey).
+    """
+    mean_r = rule_state["mean_reward"]
+    mean_r_new = mean_r + gamma * (reward - mean_r)                   # Eq. 2
+
+    elig = (obs["causal"] - obs["acausal"]).astype(jnp.float32) / 255.0
+    mod = (reward - mean_r)[..., None, :]                             # Eq. 3
+    key = rule_state["key"]
+    key, sub = jax.random.split(key)
+    xi = noise * jax.random.normal(sub, weights.shape)
+    w_new = weights + eta * mod * elig + xi
+    return w_new, dict(mean_reward=mean_r_new, key=key)
+
+
+def stdp(weights, obs, rule_state, *, eta_plus: float = 0.1,
+         eta_minus: float = 0.12):
+    """Plain additive STDP from the correlation codes."""
+    dw = (eta_plus * obs["causal"].astype(jnp.float32)
+          - eta_minus * obs["acausal"].astype(jnp.float32)) / 255.0
+    return weights + dw, rule_state
+
+
+def homeostasis(weights, obs, rule_state, *, target_rate: float,
+                eta: float = 0.2):
+    """Rate homeostasis: scale a column's weights toward a target rate
+    (used in the criticality-tuning style experiments, paper refs [11])."""
+    err = (target_rate - obs["rates"])[..., None, :]
+    return weights + eta * err, rule_state

@@ -1,0 +1,46 @@
+"""Short-term plasticity in the synapse drivers (paper §2.1, [45]).
+
+Tsodyks-Markram presynaptic model: virtual neurotransmitter level is a
+voltage on a storage capacitor per driver; on each presynaptic event the
+available resource R is partially used (utilization u) and the synaptic
+current pulse length is modulated accordingly; R recovers with tau_rec.
+
+A mismatch-induced *efficacy offset* per driver models the Fig.-4
+distribution; a 4-bit calibration code trims it (repro.verif.calibration).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class STPState(NamedTuple):
+    r: jnp.ndarray   # available resources in [0, 1], per driver row [..., R]
+
+
+def init_state(shape) -> STPState:
+    return STPState(r=jnp.ones(shape, jnp.float32))
+
+
+CALIB_BITS = 4
+CALIB_STEP = 0.04     # efficacy units per calibration LSB
+
+
+def efficacy(state: STPState, spikes, *, u: float, offset, calib_code):
+    """Efficacy of this step's events (0 where no spike).
+
+    offset: mismatch-induced efficacy offset per row (the Fig.-4 quantity);
+    calib_code: int 4-bit trim, efficacy_corr = offset - (code - 8) * step.
+    """
+    trim = (calib_code.astype(jnp.float32) - 2 ** (CALIB_BITS - 1)) * CALIB_STEP
+    eff = u * state.r * (1.0 + offset - trim)
+    return jnp.clip(eff, 0.0, 1.5) * spikes
+
+
+def update(state: STPState, spikes, *, u: float, tau_rec: float, dt: float
+           ) -> STPState:
+    """Resource dynamics: use on spike, recover with tau_rec."""
+    r = state.r + (1.0 - state.r) * (1.0 - jnp.exp(-dt / tau_rec))
+    r = r - u * r * spikes
+    return STPState(r=jnp.clip(r, 0.0, 1.0))

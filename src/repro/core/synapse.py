@@ -1,0 +1,50 @@
+"""Synapse array: 6-bit weights + 6-bit address matching (paper §2.1).
+
+Each synapse stores a 6-bit weight and a 6-bit address. An event on a row
+carries a source address; the synapse forwards current only when the stored
+address matches. Current amplitude = weight * DAC gain (with per-column
+mismatch) * STP efficacy of the driver.
+
+The hot operation — events x weights -> per-column synaptic currents — is a
+masked int-weight matmul; the Pallas kernel ``repro.kernels.synray``
+implements the fused 6-bit dequant + matmul for TPU, and this module's
+``synaptic_current`` is its jnp oracle (used on CPU and in tests).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+WMAX = 63  # 6-bit
+
+
+class SynapseArray(NamedTuple):
+    weights: jnp.ndarray    # [..., rows, cols] int8 in [0, 63]
+    addresses: jnp.ndarray  # [..., rows, cols] int8 in [0, 63]
+
+
+def init_array(shape_prefix, rows, cols, key=None) -> SynapseArray:
+    w = jnp.zeros((*shape_prefix, rows, cols), jnp.int8)
+    a = jnp.zeros((*shape_prefix, rows, cols), jnp.int8)
+    return SynapseArray(weights=w, addresses=a)
+
+
+def synaptic_current(weights, addresses, row_events, event_addr, gain):
+    """Per-column synaptic current from one event step.
+
+    weights/addresses: [..., R, C] int8; row_events: [..., R] float (0/1 x
+    STP efficacy); event_addr: [..., R] int8 (address carried by the event
+    on that row); gain: scalar or [..., C] DAC gain.
+    Returns [..., C] float32.
+    """
+    match = (addresses == event_addr[..., None]).astype(jnp.float32)
+    w_eff = weights.astype(jnp.float32) * match
+    i = jnp.einsum("...rc,...r->...c", w_eff, row_events.astype(jnp.float32))
+    return i * gain
+
+
+def quantize_weight(w_float):
+    """Saturating 6-bit write (the PPU's vector-store semantics)."""
+    return jnp.clip(jnp.round(w_float), 0, WMAX).astype(jnp.int8)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the machine model's compute hot-spots.
+
+Three kernels, each with a pure-jnp oracle (ref.py) and a jit'd wrapper
+(ops.py); validated shape/dtype-swept against the oracle in interpret mode
+(this container is CPU-only; TPU is the deployment target):
+
+  synray      event x 6-bit-weight synaptic-current matmul with in-kernel
+              address matching (the synapse array's event path)
+  corr        T-step fused correlation-sensor update: decay + outer-product
+              accumulation entirely in VMEM (T x fewer HBM round trips)
+  ppu_update  the PPU vector-unit inner loop: CADC digitization ->
+              eligibility -> R-STDP -> saturating 6-bit weight write-back,
+              row-parallel
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.corr.ops import correlation_window  # noqa: F401

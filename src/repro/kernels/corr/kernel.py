@@ -1,0 +1,96 @@
+"""Pallas kernel: fused T-step correlation-sensor window.
+
+Integrates T timesteps of the causal/anti-causal accumulation for one
+synapse tile without leaving VMEM:
+
+    tp[t] = lam * tp[t-1] + pre[t]         (presynaptic trace, per row)
+    tq[t] = lam * tq[t-1] + post[t]        (postsynaptic trace, per col)
+    a_c  += tp[t] (outer) post[t]          (saturating)
+    a_a  += pre[t] (outer) tq[t]           (saturating)
+
+Hardware adaptation (DESIGN.md): the analog sensor does this "for free" on
+capacitors; the naive digital port re-reads the [R, C] accumulators from
+HBM every step. The TPU-native version tiles [R, C] into VMEM blocks and
+replays the whole T-window per tile — T x fewer HBM round trips; the spike
+vectors ([T, rb] + [T, cb]) are tiny. The in-kernel loop preserves per-step
+saturation semantics exactly (a post-hoc matmul over time would not).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(pre_ref, post_ref, tp0_ref, tq0_ref, ac0_ref, aa0_ref,
+            ac_ref, aa_ref, tp_ref, tq_ref, *, lam: float, sat: float):
+    pre = pre_ref[...].astype(jnp.float32)     # [T, rb]
+    post = post_ref[...].astype(jnp.float32)   # [T, cb]
+    T = pre.shape[0]
+
+    def body(t, carry):
+        tp, tq, ac, aa = carry
+        p_t = pre[t]
+        q_t = post[t]
+        tp = tp * lam + p_t
+        tq = tq * lam + q_t
+        ac = jnp.minimum(ac + tp[:, None] * q_t[None, :], sat)
+        aa = jnp.minimum(aa + p_t[:, None] * tq[None, :], sat)
+        return tp, tq, ac, aa
+
+    tp0 = tp0_ref[...].astype(jnp.float32)[0]
+    tq0 = tq0_ref[...].astype(jnp.float32)[0]
+    ac0 = ac0_ref[...].astype(jnp.float32)
+    aa0 = aa0_ref[...].astype(jnp.float32)
+    tp, tq, ac, aa = jax.lax.fori_loop(0, T, body, (tp0, tq0, ac0, aa0))
+    ac_ref[...] = ac
+    aa_ref[...] = aa
+    tp_ref[...] = tp[None]
+    tq_ref[...] = tq[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "sat", "rb", "cb", "interpret"))
+def correlation_window_pallas(pre, post, tp0, tq0, ac0, aa0, *,
+                              lam: float, sat: float = 1023.0,
+                              rb: int = 64, cb: int = 128,
+                              interpret: bool = False):
+    """pre: [T, R]; post: [T, C]; tp0 [R]; tq0 [C]; ac0/aa0 [R, C].
+
+    Returns (a_causal, a_acausal, tp_final, tq_final).
+    """
+    T, R = pre.shape
+    C = post.shape[1]
+    rb = min(rb, R)
+    cb = min(cb, C)
+    assert R % rb == 0 and C % cb == 0
+    grid = (R // rb, C // cb)
+    out = pl.pallas_call(
+        functools.partial(_kernel, lam=lam, sat=sat),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, rb), lambda i, j: (0, i)),
+            pl.BlockSpec((T, cb), lambda i, j: (0, j)),
+            pl.BlockSpec((1, rb), lambda i, j: (0, i)),
+            pl.BlockSpec((1, cb), lambda i, j: (0, j)),
+            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+            pl.BlockSpec((1, rb), lambda i, j: (0, i)),
+            pl.BlockSpec((1, cb), lambda i, j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.float32),
+            jax.ShapeDtypeStruct((R, C), jnp.float32),
+            jax.ShapeDtypeStruct((1, R), jnp.float32),
+            jax.ShapeDtypeStruct((1, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pre, post, tp0[None], tq0[None], ac0, aa0)
+    ac, aa, tp, tq = out
+    return ac, aa, tp[0], tq[0]

@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the fused correlation-window kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.corr.kernel import correlation_window_pallas
+from repro.kernels.corr.ref import correlation_window_ref
+
+
+def correlation_window(pre, post, tp0, tq0, ac0, aa0, *, lam, sat=1023.0,
+                       impl: str = "auto", **block_kw):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return correlation_window_ref(pre, post, tp0, tq0, ac0, aa0,
+                                      lam=lam, sat=sat)
+    return correlation_window_pallas(pre, post, tp0, tq0, ac0, aa0, lam=lam,
+                                     sat=sat, interpret=(impl == "interpret"),
+                                     **block_kw)

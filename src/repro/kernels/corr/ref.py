@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the corr kernel (scan over repro.core.correlation)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.correlation import CorrelationState, update
+
+
+def correlation_window_ref(pre, post, tp0, tq0, ac0, aa0, *, lam: float,
+                           sat: float = 1023.0):
+    """Same contract as correlation_window_pallas, via lax.scan over the
+    core module's per-step update. lam = exp(-dt/tau)."""
+    # recover (tau, dt) pair giving this lam: update() takes tau & dt
+    dt = 1.0
+    tau = -dt / jnp.log(lam)
+    st = CorrelationState(trace_pre=tp0, trace_post=tq0,
+                          a_causal=ac0, a_acausal=aa0)
+
+    def body(s, x):
+        p, q = x
+        return update(s, p, q, tau_pre=tau, tau_post=tau, dt=dt, sat=sat), None
+
+    st, _ = jax.lax.scan(body, st, (pre, post))
+    return st.a_causal, st.a_acausal, st.trace_pre, st.trace_post

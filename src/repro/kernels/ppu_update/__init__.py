@@ -1,0 +1,1 @@
+from repro.kernels.ppu_update.ops import rstdp_update  # noqa: F401

@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the PPU R-STDP update kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ppu_update.kernel import rstdp_update_pallas
+from repro.kernels.ppu_update.ref import rstdp_update_ref
+
+
+def rstdp_update(weights, a_causal, a_acausal, cadc_offset, cadc_gain, mod,
+                 xi, *, eta, impl: str = "auto", **kw):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return jax.jit(
+            lambda *a: rstdp_update_ref(*a, eta=eta, **kw)
+        )(weights, a_causal, a_acausal, cadc_offset, cadc_gain, mod, xi)
+    return rstdp_update_pallas(weights, a_causal, a_acausal, cadc_offset,
+                               cadc_gain, mod, xi, eta=eta,
+                               interpret=(impl == "interpret"), **kw)

@@ -1,0 +1,1 @@
+from repro.kernels.synray.ops import synaptic_current  # noqa: F401

@@ -1,0 +1,65 @@
+"""Pallas kernel: synapse-array event path.
+
+i[b, c] = sum_r ev[b, r] * w[r, c] * (addr_store[r, c] == addr_event[b, r])
+
+Hardware adaptation (DESIGN.md): on BSS-2 the address comparison happens in
+each synapse circuit as the event ripples down the row. On TPU the natural
+mapping is a *masked* block matmul: the weight/address tile lives in VMEM,
+the per-(batch,row) event address broadcasts against the stored-address
+tile, and the masked tile contracts against the event vector. Tiles are
+MXU/VPU aligned (row x 128-lane column blocks); the reduction runs over the
+row-block grid axis with an accumulator in the output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ev_ref, ea_ref, w_ref, st_ref, out_ref):
+    r_idx = pl.program_id(2)
+
+    @pl.when(r_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ev = ev_ref[...].astype(jnp.float32)            # [bb, rb]
+    ea = ea_ref[...]                                # [bb, rb] int8
+    w = w_ref[...].astype(jnp.float32)              # [rb, cb]
+    st = st_ref[...]                                # [rb, cb] int8
+
+    # [bb, rb, cb] masked tile — bounded by the block sizes, VMEM-resident
+    mask = (st[None, :, :] == ea[:, :, None]).astype(jnp.float32)
+    contrib = jnp.sum(ev[:, :, None] * (w[None, :, :] * mask), axis=1)
+    out_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "cb", "rb", "interpret"))
+def synaptic_current_pallas(events, event_addr, weights, addresses, *,
+                            bb: int = 8, cb: int = 128, rb: int = 64,
+                            interpret: bool = False):
+    """events: [B, R] f32; event_addr: [B, R] i8; weights/addresses: [R, C]
+    i8. Returns [B, C] f32."""
+    B, R = events.shape
+    C = weights.shape[1]
+    bb = min(bb, B)
+    cb = min(cb, C)
+    rb = min(rb, R)
+    assert B % bb == 0 and C % cb == 0 and R % rb == 0, (B, R, C, bb, rb, cb)
+    grid = (B // bb, C // cb, R // rb)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, rb), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bb, rb), lambda i, j, k: (i, k)),
+            pl.BlockSpec((rb, cb), lambda i, j, k: (k, j)),
+            pl.BlockSpec((rb, cb), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, cb), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        interpret=interpret,
+    )(events, event_addr, weights, addresses)

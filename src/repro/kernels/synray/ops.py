@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for the synray kernel.
+
+On TPU the Pallas path runs natively; elsewhere (CPU container) it runs in
+interpret mode or falls back to the jnp oracle — selected by ``impl``.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.synray.kernel import synaptic_current_pallas
+from repro.kernels.synray.ref import synaptic_current_ref
+
+
+def synaptic_current(events, event_addr, weights, addresses,
+                     impl: str = "auto", **block_kw):
+    """impl: auto | pallas | interpret | ref."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return jax.jit(synaptic_current_ref)(events, event_addr, weights,
+                                             addresses)
+    return synaptic_current_pallas(events, event_addr, weights, addresses,
+                                   interpret=(impl == "interpret"),
+                                   **block_kw)

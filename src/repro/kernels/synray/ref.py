@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the synray kernel (mirrors repro.core.synapse)."""
+import jax.numpy as jnp
+
+
+def synaptic_current_ref(events, event_addr, weights, addresses):
+    """events [B, R] f32; event_addr [B, R] i8; weights/addresses [R, C] i8
+    -> [B, C] f32."""
+    mask = (addresses[None, :, :] == event_addr[:, :, None])
+    w_eff = weights.astype(jnp.float32)[None] * mask.astype(jnp.float32)
+    return jnp.einsum("br,brc->bc", events.astype(jnp.float32), w_eff)

@@ -1,0 +1,88 @@
+"""Training driver.
+
+Examples (CPU-sized):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+      --steps 30
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --smoke \
+      --trainer hybrid --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch bss2 --steps 300
+
+On a real pod, drop --smoke and pass --shape train_4k: the same driver
+builds the production mesh and shards per DESIGN.md §4.
+"""
+import argparse
+import dataclasses
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shape (CPU)")
+    ap.add_argument("--trainer", choices=["adamw", "hybrid"], default="adamw")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress-bits", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "single", "multi"],
+                    default="none")
+    args = ap.parse_args()
+
+    from repro.config import SHAPES, MeshConfig, get_arch
+    from repro.parallel.sharding import ShardingCtx
+
+    arch = get_arch(args.arch)
+    if args.arch == "bss2":
+        from repro.core.hybrid import run_training
+        out, state, meta = run_training(n_trials=args.steps, seed=args.seed)
+        import numpy as np
+        mr = out["mean_reward"]
+        print(f"final median <R> = {np.median(mr[-1]):.3f}")
+        return
+
+    shape = SHAPES[args.shape]
+    if args.smoke:
+        arch = arch.reduced()
+        shape = shape.reduced()
+
+    ctx = ShardingCtx()
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+        multi = args.mesh == "multi"
+        ctx = ShardingCtx(mesh=make_production_mesh(multi_pod=multi),
+                          mesh_cfg=MeshConfig(multi_pod=multi))
+
+    if args.trainer == "hybrid":
+        from repro.data.pipeline import SyntheticLMPipeline
+        from repro.parallel.sharding import init_params
+        from repro.plasticity.three_factor import HybridReadoutTrainer
+        tr = HybridReadoutTrainer(arch, ctx)
+        params = init_params(tr.bundle.decls, jax.random.PRNGKey(args.seed),
+                             ctx)
+        pipe = SyntheticLMPipeline(arch, shape, seed=args.seed)
+        st = tr.init_state(jax.random.PRNGKey(args.seed + 1))
+        for i in range(args.steps):
+            st, m = tr.step(params, st, pipe.next_batch())
+            if i % 10 == 0:
+                print(f"step {i}: reward {float(m['reward']):.4f} "
+                      f"<R> {float(m['mean_r']):.4f} "
+                      f"acc {float(m['acc_greedy']):.4f}", flush=True)
+        return
+
+    from repro.train.trainer import Trainer, TrainerConfig
+    tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, seed=args.seed,
+                         accum_steps=args.accum,
+                         grad_compress_bits=args.compress_bits)
+    trainer = Trainer(arch, shape, tcfg, ctx)
+    out = trainer.train()
+    print(f"done: final loss {out['history'][-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

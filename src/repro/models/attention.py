@@ -1,0 +1,259 @@
+"""Attention: GQA with context-parallel sharding.
+
+Three execution paths:
+
+  * ``attention_prefill`` — online-softmax over KV blocks. The block loop is
+    a *python* loop (unrolled HLO) so the dry-run cost analysis is exact and
+    the peak score buffer is one block. Queries stay sequence-sharded over
+    the ``model`` axis (context parallelism) — this keeps per-device compute
+    exact for head counts (15/24/25) that do not divide the 16-way axis;
+    head-sharding was measured to cost ~2x redundant FLOPs (see DESIGN.md).
+  * ``attention_swa_blocked`` — exact banded sliding-window attention via the
+    two-block trick (each w-sized q block attends to its own and the previous
+    KV block). Used when the sequence is long enough to keep every model
+    shard busy; short sequences fall back to the masked prefill path.
+  * ``attention_decode`` — one query token against a full (seq-sharded) KV
+    cache; XLA turns the softmax over the sharded KV dim into a small
+    all-reduce of max/sum partials.
+
+Scores and softmax statistics are fp32; the p@v contraction runs in the
+compute dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.parallel.sharding import Ax, ParamDecl, ShardingCtx
+from repro.models.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_decls(arch: ArchConfig) -> dict:
+    d, h, kvh, hd = arch.d_model, arch.n_heads, arch.n_kv_heads, arch.head_dim
+    decls = dict(
+        wq=ParamDecl((d, h * hd), (Ax.EMBED, Ax.HEADS_OUT)),
+        wk=ParamDecl((d, kvh * hd), (Ax.EMBED, Ax.HEADS_OUT)),
+        wv=ParamDecl((d, kvh * hd), (Ax.EMBED, Ax.HEADS_OUT)),
+        wo=ParamDecl((h * hd, d), (Ax.HEADS_OUT, Ax.EMBED)),
+    )
+    if arch.qkv_bias:
+        decls.update(
+            bq=ParamDecl((h * hd,), (None,), init="zeros"),
+            bk=ParamDecl((kvh * hd,), (None,), init="zeros"),
+            bv=ParamDecl((kvh * hd,), (None,), init="zeros"),
+        )
+    return decls
+
+
+def _qkv(x, p, arch: ArchConfig, ctx: ShardingCtx, positions):
+    b = x.shape[0]
+    s = x.shape[1]
+    h, kvh, hd = arch.n_heads, arch.n_kv_heads, arch.head_dim
+    q = x @ ctx.cast(p["wq"])
+    k = x @ ctx.cast(p["wk"])
+    v = x @ ctx.cast(p["wv"])
+    if arch.qkv_bias:
+        q = q + ctx.cast(p["bq"])
+        k = k + ctx.cast(p["bk"])
+        v = v + ctx.cast(p["bv"])
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if arch.rope_theta:
+        q = apply_rope(q, positions, arch.rope_theta)
+        k = apply_rope(k, positions, arch.rope_theta)
+    # context-parallel layout: sequence over `model`
+    q = ctx.constrain(q, Ax.BATCH, Ax.SEQ, None, None)
+    k = ctx.constrain(k, Ax.BATCH, Ax.SEQ, None, None)
+    v = ctx.constrain(v, Ax.BATCH, Ax.SEQ, None, None)
+    return q, k, v
+
+
+def attention_prefill(q, k, v, *, causal: bool, window: int, ctx: ShardingCtx,
+                      kv_block: int = 8192, q_offset: int = 0):
+    """Online-softmax attention; python-unrolled KV-block loop.
+
+    q: [b, sq, h, hd]; k/v: [b, skv, kvh, hd]. Returns [b, sq, h, hd].
+    ``q_offset``: global position of q[...,0] relative to k (prefix caches).
+
+    When the whole KV fits in one block the online accumulators are skipped
+    entirely (plain softmax): at seq<=kv_block the accumulator update traffic
+    (fp32 [b,s,h,hd] read+write per block) dominated the HLO byte count —
+    measured 1.7 TB/device on smollm train_4k with kv_block=2048 (see
+    EXPERIMENTS.md §Perf iteration log).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    scale = 1.0 / (hd ** 0.5)
+
+    kv_block = min(kv_block, skv)
+    n_blocks = (skv + kv_block - 1) // kv_block
+    qpos = jnp.arange(sq) + q_offset
+
+    if n_blocks == 1:
+        sc = jnp.einsum("bqkgd,btkd->bkgqt", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+        # keep the q dim context-parallel: without this constraint GSPMD
+        # replicates the [sq, skv] score tensor on every model shard
+        sc = ctx.constrain(sc, Ax.BATCH, None, None, Ax.SEQ, None)
+        kpos = jnp.arange(skv)
+        mask = jnp.ones((sq, skv), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(q.dtype), v,
+                         preferred_element_type=jnp.float32)
+        out = ctx.constrain(out, Ax.BATCH, Ax.SEQ, None, None, None)
+        return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+    m = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    acc = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
+
+    for j in range(n_blocks):
+        lo = j * kv_block
+        hi = min(lo + kv_block, skv)
+        kj = k[:, lo:hi]
+        vj = v[:, lo:hi]
+        kposj = jnp.arange(lo, hi)
+        s_ij = jnp.einsum("bqkgd,btkd->bkgqt", qg, kj,
+                          preferred_element_type=jnp.float32) * scale
+        s_ij = ctx.constrain(s_ij, Ax.BATCH, None, None, Ax.SEQ, None)
+        mask = jnp.ones((sq, hi - lo), bool)
+        if causal:
+            mask &= qpos[:, None] >= kposj[None, :]
+        if window:
+            mask &= (qpos[:, None] - kposj[None, :]) < window
+        s_ij = jnp.where(mask[None, None, None], s_ij, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+        p = jnp.exp(s_ij - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(q.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        pv = ctx.constrain(pv, Ax.BATCH, Ax.SEQ, None, None, None)
+        acc = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        m = m_new
+
+    lt = l.transpose(0, 3, 1, 2)[..., None]
+    out = acc / jnp.maximum(lt, 1e-30)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention_swa_blocked(q, k, v, *, window: int, ctx: ShardingCtx):
+    """Exact sliding-window attention via the two-block band trick.
+
+    Requires sq == skv == s, s % window == 0. Each w-block of queries attends
+    to its own and the previous KV block (covers the full causal window).
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    w = window
+    assert s % w == 0
+    nb = s // w
+    scale = 1.0 / (hd ** 0.5)
+
+    qb = q.reshape(b, nb, w, kvh, g, hd)
+    kb = k.reshape(b, nb, w, kvh, hd)
+    vb = v.reshape(b, nb, w, kvh, hd)
+    zpad = jnp.zeros_like(kb[:, :1])
+    kcat = jnp.concatenate([jnp.concatenate([zpad, kb[:, :-1]], 1), kb], 2)
+    vcat = jnp.concatenate([jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], 1), vb], 2)
+    # kcat: [b, nb, 2w, kvh, hd]
+    sc = jnp.einsum("bnqkgd,bntkd->bnkgqt", qb, kcat,
+                    preferred_element_type=jnp.float32) * scale
+    sc = ctx.constrain(sc, Ax.BATCH, Ax.SEQ, None, None, None, None)
+    i = jnp.arange(w)[:, None]          # q index within block
+    jj = jnp.arange(2 * w)[None, :]     # k index within concat window
+    band = (jj <= i + w) & (jj > i)     # causal + window
+    n = jnp.arange(nb)[:, None, None]
+    valid = ((n - 1) * w + jj[None]) >= 0    # first block has no predecessor
+    mask = band[None] & valid
+    sc = jnp.where(mask[None, :, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bnkgqt,bntkd->bnqkgd", p.astype(q.dtype), vcat,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, s, h, hd).astype(q.dtype)
+    return ctx.constrain(out, Ax.BATCH, Ax.SEQ, None, None)
+
+
+def attention_decode(q, cache_k, cache_v, t, *, window: int, ctx: ShardingCtx):
+    """Single-token attention over a (seq-sharded) KV cache.
+
+    q: [b, 1, h, hd]; cache_k/v: [b, S, kvh, hd]; t: current position
+    (scalar, the new token's index). Attends to positions <= t.
+    """
+    b, _, h, hd = q.shape
+    S, kvh = cache_k.shape[1], cache_k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd)
+    scale = 1.0 / (hd ** 0.5)
+    sc = jnp.einsum("bqkgd,btkd->bkgqt", qg, cache_k,
+                    preferred_element_type=jnp.float32) * scale
+    sc = ctx.constrain(sc, Ax.BATCH, None, None, None, Ax.KV_SEQ)
+    kpos = jnp.arange(S)
+    mask = kpos[None, :] <= t
+    if window:
+        mask &= kpos[None, :] > (t - window)
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(q.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def attn_layer(x, p, arch: ArchConfig, layer_idx: int, ctx: ShardingCtx, *,
+               positions, kv_block: int = 2048,
+               cache: Optional[dict] = None, t=None, collect_kv: bool = False):
+    """Full attention sublayer. Returns (out, new_cache_entry_or_None)."""
+    window = 0
+    if arch.swa_window and layer_idx not in arch.global_attn_layers:
+        window = arch.swa_window
+    q, k, v = _qkv(x, p, arch, ctx,
+                   positions=positions)
+    new_cache = None
+    if cache is not None:
+        # decode: write k/v at position t, then attend over the cache
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, t, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, t, axis=1)
+        ck = ctx.constrain(ck, Ax.BATCH, Ax.KV_SEQ, None, None)
+        cv = ctx.constrain(cv, Ax.BATCH, Ax.KV_SEQ, None, None)
+        o = attention_decode(q, ck, cv, t, window=window, ctx=ctx)
+        new_cache = dict(k=ck, v=cv)
+    else:
+        s = x.shape[1]
+        use_blocked = (window and s % window == 0
+                       and (s // window) >= max(ctx.model_size, 2))
+        if use_blocked:
+            o = attention_swa_blocked(q, k, v, window=window, ctx=ctx)
+        else:
+            o = attention_prefill(q, k, v, causal=arch.causal, window=window,
+                                  ctx=ctx, kv_block=kv_block)
+        if collect_kv:
+            new_cache = dict(k=k, v=v)
+    b, sq = o.shape[0], o.shape[1]
+    o = o.reshape(b, sq, arch.n_heads * arch.head_dim)
+    o = ctx.constrain(o, Ax.BATCH, Ax.SEQ, None)
+    return o @ ctx.cast(p["wo"]), new_cache
+
+
+def cache_decls(arch: ArchConfig, batch: int, max_len: int, dtype) -> dict:
+    """KV-cache declarations per layer (batch over data, seq over model)."""
+    kvh, hd = arch.n_kv_heads, arch.head_dim
+    return dict(
+        k=ParamDecl((batch, max_len, kvh, hd),
+                    (Ax.BATCH, Ax.KV_SEQ, None, None), init="zeros", dtype=dtype),
+        v=ParamDecl((batch, max_len, kvh, hd),
+                    (Ax.BATCH, Ax.KV_SEQ, None, None), init="zeros", dtype=dtype),
+    )

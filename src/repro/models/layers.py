@@ -1,0 +1,161 @@
+"""Shared layer primitives: norms, RoPE, SwiGLU MLP, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import Ax, ParamDecl, ShardingCtx
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_decl(d: int) -> ParamDecl:
+    return ParamDecl((d,), (None,), init="ones")
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def rmsnorm_gated(x, z, w, eps: float = 1e-5):
+    """Mamba-2 gated RMSNorm: norm(x * silu(z)) * w."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., seq, heads, head_dim]; positions broadcastable to [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., seq, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_decls(d: int, f: int) -> dict:
+    return dict(
+        wg=ParamDecl((d, f), (Ax.EMBED, Ax.FF)),
+        w1=ParamDecl((d, f), (Ax.EMBED, Ax.FF)),
+        w2=ParamDecl((f, d), (Ax.FF, Ax.EMBED)),
+    )
+
+
+def mlp(x, p, ctx: ShardingCtx):
+    h = jax.nn.silu(x @ ctx.cast(p["wg"])) * (x @ ctx.cast(p["w1"]))
+    return h @ ctx.cast(p["w2"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (vocab-sharded)
+# ---------------------------------------------------------------------------
+
+def embed_decl(vocab: int, d: int) -> ParamDecl:
+    return ParamDecl((vocab, d), (Ax.VOCAB, Ax.EMBED), init="embed")
+
+
+def embed_lookup(tokens, emb, ctx: ShardingCtx):
+    x = ctx.cast(emb)[tokens]
+    return x
+
+
+def unembed(x, emb, ctx: ShardingCtx, real_vocab: int = 0):
+    """Logits against the (tied) embedding — vocab stays model-sharded.
+
+    The bf16 weight operand is explicitly constrained to (vocab-sharded,
+    embed-replicated): without this GSPMD keeps the FSDP shard on the
+    contraction dim and lowers the matmul into *logit partial-sum
+    all-reduces* — measured ~10 GB-scale fp32 AR per loss chunk vs an
+    ~84 MB weight all-gather (EXPERIMENTS.md §Perf P7)."""
+    emb_c = ctx.constrain(ctx.cast(emb), Ax.VOCAB_ACT, None)
+    logits = x @ emb_c.T
+    axes = (Ax.BATCH,) + (Ax.NONE,) * (x.ndim - 2) + (Ax.VOCAB_ACT,)
+    logits = ctx.constrain(logits, *axes)
+    return mask_vocab_pad(logits, real_vocab)
+
+
+def mask_vocab_pad(logits, real_vocab: int):
+    """-inf the padded vocab columns (vocab_padded > vocab)."""
+    if real_vocab and logits.shape[-1] > real_vocab:
+        col = jnp.arange(logits.shape[-1])
+        logits = jnp.where(col < real_vocab, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def lm_loss_chunked(x, emb_or_head, labels, ctx: ShardingCtx, *,
+                    tied: bool, mask=None, max_chunk_tokens: int = 1 << 18,
+                    real_vocab: int = 0):
+    """Cross entropy with the unembed fused per batch-chunk.
+
+    Avoids materializing the full [B, S, V] fp32 logits: the python loop over
+    batch chunks keeps the peak at chunk_B x S x V (and stays exact in the
+    dry-run HLO cost analysis, unlike a scan).
+    """
+    b, s = labels.shape
+    n_chunks = max(1, (b * s) // max_chunk_tokens)
+    while b % n_chunks:
+        n_chunks -= 1
+    cb = b // n_chunks
+    total = jnp.zeros((), jnp.float32)
+    denom = jnp.zeros((), jnp.float32)
+    w = emb_or_head if not tied else None
+    for i in range(n_chunks):
+        xc = x[i * cb:(i + 1) * cb]
+        lc = labels[i * cb:(i + 1) * cb]
+        if tied:
+            logits = unembed(xc, emb_or_head, ctx, real_vocab=real_vocab)
+        else:
+            w_c = ctx.constrain(ctx.cast(w), None, Ax.VOCAB_ACT)
+            logits = ctx.constrain(xc @ w_c, Ax.BATCH, None, Ax.VOCAB_ACT)
+            logits = mask_vocab_pad(logits, real_vocab)
+        logits = logits.astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if mask is not None:
+            mc = mask[i * cb:(i + 1) * cb]
+            total = total + jnp.sum(nll * mc)
+            denom = denom + jnp.sum(mc)
+        else:
+            total = total + jnp.sum(nll)
+            denom = denom + nll.size
+    return total / jnp.maximum(denom, 1.0)
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Cross entropy stable over a (possibly vocab-sharded) last dim."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

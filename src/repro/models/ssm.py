@@ -1,0 +1,229 @@
+"""Mamba-2 SSD (state-space duality) block — matmul-native TPU formulation.
+
+The chunked SSD algorithm is expressed *entirely* as einsums:
+
+  * intra-chunk: (C_i·B_j) ⊙ decay-kernel, a [Q,Q] matmul per chunk — MXU
+    friendly;
+  * inter-chunk state passing: instead of a sequential scan over chunks (a
+    `while` loop hides FLOPs from the dry-run cost analysis and serializes),
+    the cumulative states are computed with an O(nc²) *decay-matrix matmul*
+    h_c = Σ_{j<c} (Π decay) S_j — nc = seq/chunk is small (16–128), so the
+    quadratic term is negligible and the whole layer is dense linear algebra.
+
+This is the hardware-adaptation called out in DESIGN.md: the GPU
+implementation of SSD leans on a warp-level scan; on TPU the idiomatic port
+turns the scan into a small dense matmul against a masked decay matrix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.parallel.sharding import Ax, ParamDecl, ShardingCtx
+from repro.models.layers import rmsnorm_gated
+
+
+def ssm_dims(arch: ArchConfig):
+    s = arch.ssm
+    di = arch.d_model * s.expand
+    nh = di // s.head_dim
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return di, nh, conv_dim
+
+
+def ssm_decls(arch: ArchConfig) -> dict:
+    d = arch.d_model
+    s = arch.ssm
+    di, nh, conv_dim = ssm_dims(arch)
+    d_in_proj = 2 * di + 2 * s.n_groups * s.d_state + nh
+    return dict(
+        # w_in's packed output (z ++ xBC ++ dt, width 2*di+2*ng*ns+nh) is not
+        # TP-divisible and must not be split mid-field: FSDP-shard the embed
+        # dim only; the SSD inner compute is sequence-parallel instead.
+        w_in=ParamDecl((d, d_in_proj), (Ax.EMBED, None)),
+        conv_w=ParamDecl((s.d_conv, conv_dim), (None, None), scale=0.5),
+        conv_b=ParamDecl((conv_dim,), (None,), init="zeros"),
+        a_log=ParamDecl((nh,), (None,), init="zeros"),
+        dt_bias=ParamDecl((nh,), (None,), init="zeros"),
+        d_skip=ParamDecl((nh,), (None,), init="ones"),
+        norm_w=ParamDecl((di,), (None,), init="ones"),
+        w_out=ParamDecl((di, d), (Ax.FF, Ax.EMBED)),
+    )
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via k shifted adds. x: [b, s, c]; w: [k, c]."""
+    k = w.shape[0]
+    y = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        y = y + shifted * w[k - 1 - i]
+    return y + b
+
+
+def _split_proj(zxbcdt, arch: ArchConfig):
+    s = arch.ssm
+    di, nh, _ = ssm_dims(arch)
+    gs = s.n_groups * s.d_state
+    z = zxbcdt[..., :di]
+    xc = zxbcdt[..., di:2 * di + 2 * gs]       # x ++ B ++ C (conv input)
+    dt = zxbcdt[..., 2 * di + 2 * gs:]
+    return z, xc, dt
+
+
+def ssd_prefill(x, p, arch: ArchConfig, ctx: ShardingCtx, *, return_state=False):
+    """Full-sequence SSD. x: [b, s, d] -> [b, s, d] (+ final ssm state)."""
+    b, s_in, d = x.shape
+    cfg = arch.ssm
+    di, nh, conv_dim = ssm_dims(arch)
+    hd, ns, ng = cfg.head_dim, cfg.d_state, cfg.n_groups
+    Q = min(cfg.chunk, s_in)
+    pad = (-s_in) % Q
+    if pad:
+        # zero-pad the tail to a chunk multiple (outputs are sliced back;
+        # only valid with return_state=False, since the tail would pollute
+        # the final state)
+        assert not return_state, "padded prefill cannot return a state"
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s_len = s_in + pad
+    nc = s_len // Q
+
+    zxbcdt = x @ ctx.cast(p["w_in"])
+    z, xconv_raw, dt = _split_proj(zxbcdt, arch)
+    xconv = jax.nn.silu(_causal_conv(xconv_raw, ctx.cast(p["conv_w"]),
+                                     ctx.cast(p["conv_b"])))
+    xs = xconv[..., :di].reshape(b, s_len, nh, hd)
+    Bm = xconv[..., di:di + ng * ns].reshape(b, s_len, ng, ns)
+    Cm = xconv[..., di + ng * ns:].reshape(b, s_len, ng, ns)
+    # broadcast groups over heads
+    rep = nh // ng
+    Bh = jnp.repeat(Bm, rep, axis=2)           # [b, s, nh, ns]
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dt = jnp.clip(dt, cfg.dt_min, cfg.dt_max * 100)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # [nh], a < 0
+    dA = dt * a                                           # [b, s, nh] (log decay)
+
+    # chunked layout
+    def chunk(t):
+        return t.reshape(b, nc, Q, *t.shape[2:])
+    xs_c, Bh_c, Ch_c, dt_c, dA_c = map(chunk, (xs, Bh, Ch, dt, dA))
+    xs_c = ctx.constrain(xs_c, Ax.BATCH, Ax.SEQ, None, None, None)
+    Bh_c = ctx.constrain(Bh_c, Ax.BATCH, Ax.SEQ, None, None, None)
+    Ch_c = ctx.constrain(Ch_c, Ax.BATCH, Ax.SEQ, None, None, None)
+    dt_c = ctx.constrain(dt_c, Ax.BATCH, Ax.SEQ, None, None)
+    dA_c = ctx.constrain(dA_c, Ax.BATCH, Ax.SEQ, None, None)
+
+    cum = jnp.cumsum(dA_c, axis=2)                        # [b, nc, Q, nh]
+    total = cum[:, :, -1]                                 # [b, nc, nh]
+
+    # ---- intra-chunk (masked kernel matmul) ---------------------------------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,Q(i),Q(j),nh]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch_c, Bh_c,
+                        preferred_element_type=jnp.float32)
+    scores = ctx.constrain(scores, Ax.BATCH, Ax.SEQ, None, None, None)
+    M = scores * L * dt_c[:, :, None, :, :]               # [b,nc,Q,Q,nh]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M.astype(x.dtype), xs_c,
+                        preferred_element_type=jnp.float32)
+    y_diag = ctx.constrain(y_diag, Ax.BATCH, Ax.SEQ, None, None, None)
+
+    # ---- chunk states --------------------------------------------------------
+    # S_c = Σ_j exp(total_c - cum_j) dt_j B_j ⊗ x_j    [b, nc, nh, ns, hd]
+    decay_to_end = jnp.exp(total[:, :, None] - cum) * dt_c      # [b,nc,Q,nh]
+    Sc = jnp.einsum("bcjhn,bcjhp->bchnp",
+                    (Bh_c * decay_to_end[..., None]).astype(x.dtype), xs_c,
+                    preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk state passing as a decay-matrix matmul -----------------
+    # H_c (state entering chunk c) = Σ_{j<c} exp(Σ_{m=j+1..c-1} total_m) S_j
+    tot_cum = jnp.cumsum(total, axis=1)                   # [b, nc, nh]
+    # D[c, j] = exp(tot_cum_{c-1} - tot_cum_j) for j <= c-1 else 0
+    dd = tot_cum[:, :, None, :] - tot_cum[:, None, :, :]  # [b, c, j, nh]
+    strict = jnp.tril(jnp.ones((nc, nc), bool), k=-1)
+    # shift: want exp(tot_cum_{c-1} - tot_cum_j); tot_cum_{c-1} = tot_cum_c - total_c
+    dmat = jnp.where(strict[None, :, :, None],
+                     jnp.exp(dd - total[:, :, None, :]), 0.0)
+    H = jnp.einsum("bcjh,bjhnp->bchnp", dmat.astype(jnp.float32), Sc,
+                   preferred_element_type=jnp.float32)    # [b,nc,nh,ns,hd]
+
+    # ---- inter-chunk output contribution -------------------------------------
+    in_decay = jnp.exp(cum)                                # decay from chunk start
+    y_off = jnp.einsum("bcihn,bchnp->bcihp",
+                       (Ch_c * in_decay[..., None]).astype(x.dtype),
+                       H.astype(x.dtype), preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, s_len, nh, hd)
+    y = y + xs * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s_len, di).astype(x.dtype)
+    y = ctx.constrain(y, Ax.BATCH, Ax.SEQ, None)
+    y = rmsnorm_gated(y, z, p["norm_w"], arch.norm_eps)
+    out = y @ ctx.cast(p["w_out"])
+    if pad:
+        out = out[:, :s_in]
+    if return_state:
+        final = H[:, -1] * jnp.exp(total[:, -1])[..., None, None] + Sc[:, -1]
+        state = dict(
+            conv=xconv_raw[:, -(cfg.d_conv - 1):].astype(jnp.float32),
+            ssm=final)                                     # [b, nh, ns, hd]
+        return out, state
+    return out
+
+
+def ssd_decode_step(x_t, state, p, arch: ArchConfig, ctx: ShardingCtx):
+    """One-token SSD update.
+
+    x_t: [b, 1, d]; state: dict(conv=[b, k-1, conv_dim], ssm=[b, nh, ns, hd]).
+    Returns (y_t [b, 1, d], new_state).
+    """
+    b = x_t.shape[0]
+    cfg = arch.ssm
+    di, nh, conv_dim = ssm_dims(arch)
+    hd, ns, ng = cfg.head_dim, cfg.d_state, cfg.n_groups
+
+    zxbcdt = x_t @ ctx.cast(p["w_in"])
+    z, xc_new, dt = _split_proj(zxbcdt, arch)
+    # rolling conv state
+    conv_in = jnp.concatenate([state["conv"], xc_new], axis=1)  # [b, k, c]
+    w = ctx.cast(p["conv_w"])
+    xc = jnp.sum(conv_in * w[None], axis=1, keepdims=True) + ctx.cast(p["conv_b"])
+    xc = jax.nn.silu(xc)
+    new_conv = conv_in[:, 1:]
+
+    xs = xc[..., :di].reshape(b, nh, hd)
+    Bm = xc[..., di:di + ng * ns].reshape(b, ng, ns)
+    Cm = xc[..., di + ng * ns:].reshape(b, ng, ns)
+    rep = nh // ng
+    Bh = jnp.repeat(Bm, rep, axis=1)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # [b, nh]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                    # [b, nh]
+
+    upd = jnp.einsum("bhn,bhp->bhnp", Bh * dt[..., None], xs,
+                     preferred_element_type=jnp.float32)
+    new_ssm = state["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_ssm.astype(x_t.dtype),
+                   preferred_element_type=jnp.float32)
+    y = y + xs * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x_t.dtype)
+    y = rmsnorm_gated(y, z, p["norm_w"], arch.norm_eps)
+    return y @ ctx.cast(p["w_out"]), dict(conv=new_conv, ssm=new_ssm)
+
+
+def ssm_state_decls(arch: ArchConfig, batch: int) -> dict:
+    cfg = arch.ssm
+    di, nh, conv_dim = ssm_dims(arch)
+    return dict(
+        conv=ParamDecl((batch, cfg.d_conv - 1, conv_dim),
+                       (Ax.BATCH, None, None), init="zeros", dtype=jnp.float32),
+        ssm=ParamDecl((batch, nh, cfg.d_state, cfg.head_dim),
+                      (Ax.BATCH, None, None, None), init="zeros",
+                      dtype=jnp.float32),
+    )

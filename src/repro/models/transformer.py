@@ -1,0 +1,418 @@
+"""Model assembly for all assigned architecture families.
+
+``build_model(arch, ctx)`` returns a ``ModelBundle`` of pure functions:
+
+  * ``decls``            — ParamDecl tree (single source of truth for init,
+                           abstract lowering, and sharding specs)
+  * ``forward``          — logits for train/prefill
+  * ``loss``             — scalar LM/masked-unit loss (+ MoE aux)
+  * ``cache_decls``      — decode-state declarations
+  * ``decode_step``      — one-token step against the cache
+
+Families:
+  dense / vlm / audio : pre-norm attention + SwiGLU
+  moe                 : pre-norm attention + (shared + routed top-k) MoE
+  ssm                 : mamba-2 SSD blocks (no attention, no MLP)
+  hybrid (hymba)      : parallel attention ∥ SSD heads, fused by mean of the
+                        two normed branch outputs, + SwiGLU MLP; learnable
+                        meta tokens prepended; SWA except global layers
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.parallel.sharding import Ax, ParamDecl, ShardingCtx, abstract_params
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import ssm as S
+from repro.models import moe as M
+
+AUX_LOSS_W = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+
+def _layer_decls(arch: ArchConfig, i: int) -> dict:
+    d = arch.d_model
+    decls: Dict[str, Any] = dict(ln1=L.rmsnorm_decl(d))
+    if arch.n_heads:
+        decls["attn"] = A.attn_decls(arch)
+    if arch.family == "ssm":
+        decls["ssm"] = S.ssm_decls(arch)
+        return decls  # mamba block: single norm, no MLP
+    if arch.family == "hybrid":
+        decls["ssm"] = S.ssm_decls(arch)
+        di = arch.d_model * arch.ssm.expand
+        decls["attn_branch_norm"] = L.rmsnorm_decl(d)
+        decls["ssm_branch_norm"] = L.rmsnorm_decl(d)
+    decls["ln2"] = L.rmsnorm_decl(d)
+    if arch.moe.n_experts and i >= arch.moe.first_k_dense:
+        decls["moe"] = M.moe_decls(arch)
+    elif arch.moe.n_experts:
+        decls["mlp"] = L.mlp_decls(d, arch.moe.d_ff_dense_first)
+    elif arch.d_ff:
+        decls["mlp"] = L.mlp_decls(d, arch.d_ff)
+    return decls
+
+
+def model_decls(arch: ArchConfig) -> dict:
+    d = arch.d_model
+    decls: Dict[str, Any] = dict(
+        emb=L.embed_decl(arch.vocab_padded, d),
+        ln_f=L.rmsnorm_decl(d),
+    )
+    if not arch.tie_embeddings:
+        decls["head"] = ParamDecl((d, arch.vocab_padded), (Ax.EMBED, Ax.VOCAB))
+    if arch.n_meta_tokens:
+        decls["meta"] = ParamDecl((arch.n_meta_tokens, d), (None, Ax.EMBED),
+                                  init="embed")
+    if arch.vit_dim:
+        decls["vit_proj"] = dict(
+            w1=ParamDecl((arch.vit_dim, d), (None, Ax.EMBED)),
+            w2=ParamDecl((d, d), (Ax.EMBED, None)),
+        )
+    if arch.frame_dim:
+        decls["frame_proj"] = ParamDecl((arch.frame_dim, d), (None, Ax.EMBED))
+        decls["mask_emb"] = ParamDecl((d,), (None,), init="embed")
+    for i in range(arch.n_layers):
+        decls[f"layer_{i}"] = _layer_decls(arch, i)
+    return decls
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _block(x, p, arch: ArchConfig, i: int, ctx: ShardingCtx, *, positions,
+           cache=None, t=None, collect_cache=False):
+    """One transformer/SSM/hybrid block. Returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    h = L.rmsnorm(x, p["ln1"], arch.norm_eps)
+
+    if arch.family == "ssm":
+        if cache is not None:
+            y, st = S.ssd_decode_step(h, cache["ssm"], p["ssm"], arch, ctx)
+            new_cache["ssm"] = st
+        else:
+            y = S.ssd_prefill(h, p["ssm"], arch, ctx,
+                              return_state=collect_cache)
+            if collect_cache:
+                y, new_cache["ssm"] = y
+        return x + y, aux, new_cache
+
+    if arch.family == "hybrid":
+        ao, kv = A.attn_layer(h, p["attn"], arch, i, ctx, positions=positions,
+                              cache=cache.get("kv") if cache else None, t=t,
+                              collect_kv=collect_cache)
+        if cache is not None:
+            so, st = S.ssd_decode_step(h, cache["ssm"], p["ssm"], arch, ctx)
+            new_cache = dict(kv=kv, ssm=st)
+        else:
+            so = S.ssd_prefill(h, p["ssm"], arch, ctx,
+                               return_state=collect_cache)
+            if collect_cache:
+                so, st = so
+                new_cache = dict(kv=kv, ssm=st)
+        ao = L.rmsnorm(ao, p["attn_branch_norm"], arch.norm_eps)
+        so = L.rmsnorm(so, p["ssm_branch_norm"], arch.norm_eps)
+        x = x + 0.5 * (ao + so)
+    else:
+        ao, kv = A.attn_layer(h, p["attn"], arch, i, ctx, positions=positions,
+                              cache=cache.get("kv") if cache else None, t=t,
+                              collect_kv=collect_cache)
+        if cache is not None or collect_cache:
+            new_cache["kv"] = kv
+        x = x + ao
+
+    h2 = L.rmsnorm(x, p["ln2"], arch.norm_eps)
+    if "moe" in p:
+        # "ep" (shard_map expert parallelism) is the production default —
+        # the GSPMD auto-sharded dispatch ("gspmd") is kept as the
+        # paper-faithful naive baseline; see EXPERIMENTS.md §Perf for the
+        # measured 126x collective-bytes difference on moonshot/train_4k.
+        moe_fn = (M.moe_ffn
+                  if ctx.overrides.get("moe_impl", "ep") == "gspmd"
+                  else M.moe_ffn_ep)
+        y, a = moe_fn(h2, p["moe"], arch, ctx)
+        aux = aux + a
+    else:
+        y = L.mlp(h2, p["mlp"], ctx)
+    x = x + y
+    x = ctx.constrain(x, Ax.BATCH, Ax.SEQ, None)
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding frontends
+# ---------------------------------------------------------------------------
+
+def _frontend(params, batch, arch: ArchConfig, ctx: ShardingCtx):
+    """Returns (x [b, s_total, d], label_mask or None)."""
+    if arch.family == "audio":
+        frames = batch["frames"].astype(ctx.compute_dtype)
+        # deterministic ~8% span masking (multiplicative hash)
+        s = frames.shape[1]
+        pos = jnp.arange(s, dtype=jnp.uint32)
+        masked = ((pos * jnp.uint32(2654435761)) % jnp.uint32(100)) < jnp.uint32(8)
+        x = frames @ ctx.cast(params["frame_proj"])
+        x = jnp.where(masked[None, :, None], ctx.cast(params["mask_emb"]), x)
+        # sinusoidal absolute positions (conv-pos stub)
+        d = arch.d_model
+        inv = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+        ang = pos.astype(jnp.float32)[:, None] * inv[None, :]
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(x.dtype)
+        x = x + pe[None]
+        return ctx.constrain(x, Ax.BATCH, Ax.SEQ, None), masked
+
+    parts = []
+    if arch.n_meta_tokens:
+        b = batch["tokens"].shape[0]
+        meta = jnp.broadcast_to(ctx.cast(params["meta"])[None],
+                                (b, arch.n_meta_tokens, arch.d_model))
+        parts.append(meta)
+    if arch.vit_dim:
+        pe = batch["patch_embeds"].astype(ctx.compute_dtype)
+        proj = jax.nn.gelu(pe @ ctx.cast(params["vit_proj"]["w1"]))
+        proj = proj @ ctx.cast(params["vit_proj"]["w2"])
+        parts.append(proj)
+    parts.append(L.embed_lookup(batch["tokens"], params["emb"], ctx))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    return ctx.constrain(x, Ax.BATCH, Ax.SEQ, None), None
+
+
+def prefix_len(arch: ArchConfig) -> int:
+    return arch.n_meta_tokens + (arch.n_patches if arch.vit_dim else 0)
+
+
+# ---------------------------------------------------------------------------
+# Bundle
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ModelBundle:
+    arch: ArchConfig
+    ctx: ShardingCtx
+    decls: dict
+    forward: Callable
+    prefill: Callable
+    loss: Callable
+    make_cache_decls: Callable
+    decode_step: Callable
+
+
+def _layer_segments(arch: ArchConfig):
+    """Homogeneous layer segments for lax.scan (same params + same block
+    computation). Exceptional layers (DeepSeek first-dense, hymba global-
+    attention) run as explicit python-loop segments."""
+    if arch.family == "hybrid" and arch.global_attn_layers:
+        segs = []
+        cur = 0
+        for g in sorted(arch.global_attn_layers):
+            if g > cur:
+                segs.append((cur, g, "scan"))
+            segs.append((g, g + 1, "loop"))
+            cur = g + 1
+        if cur < arch.n_layers:
+            segs.append((cur, arch.n_layers, "scan"))
+        return segs
+    if arch.moe.n_experts and arch.moe.first_k_dense:
+        return [(0, arch.moe.first_k_dense, "loop"),
+                (arch.moe.first_k_dense, arch.n_layers, "scan")]
+    return [(0, arch.n_layers, "scan")]
+
+
+def build_model(arch: ArchConfig, ctx: ShardingCtx) -> ModelBundle:
+    decls = model_decls(arch)
+
+    def _remat_wrap(blk, use_remat):
+        if arch.remat and use_remat:
+            policy = None
+            if arch.remat_policy == "dots":
+                policy = jax.checkpoint_policies.\
+                    dots_with_no_batch_dims_saveable
+            return jax.checkpoint(blk, policy=policy)
+        return blk
+
+    def features(params, batch, *, collect_cache=False, use_remat=True):
+        """Backbone forward -> final-norm features (pre-unembed).
+
+        ``ctx.unroll=True`` (dry-run roofline) python-unrolls every layer so
+        XLA's cost analysis is exact; the default path scans homogeneous
+        layer segments (compile time ~independent of depth — measured 50x
+        faster on 32L)."""
+        x, label_mask = _frontend(params, batch, arch, ctx)
+        positions = jnp.arange(x.shape[1])
+        aux_total = jnp.zeros((), jnp.float32)
+        cache = {}
+        if collect_cache or ctx.unroll:
+            for i in range(arch.n_layers):
+                p_i = params[f"layer_{i}"]
+                if collect_cache:
+                    x, aux, nc = _block(x, p_i, arch, i, ctx,
+                                        positions=positions,
+                                        collect_cache=True)
+                    cache[f"layer_{i}"] = nc
+                else:
+                    def blk(xx, pp, _i=i):
+                        xo, aux, _ = _block(xx, pp, arch, _i, ctx,
+                                            positions=positions)
+                        return xo, aux
+                    x, aux = _remat_wrap(blk, use_remat)(x, p_i)
+                aux_total = aux_total + aux
+        else:
+            for (lo, hi, kind) in _layer_segments(arch):
+                def blk(xx, pp, _i=lo):
+                    xo, aux, _ = _block(xx, pp, arch, _i, ctx,
+                                        positions=positions)
+                    return xo, aux
+                blk = _remat_wrap(blk, use_remat)
+                if kind == "loop" or hi - lo == 1:
+                    for i in range(lo, hi):
+                        x, aux = blk(x, params[f"layer_{i}"])
+                        aux_total = aux_total + aux
+                else:
+                    stacked = jax.tree.map(
+                        lambda *xs: jnp.stack(xs),
+                        *[params[f"layer_{i}"] for i in range(lo, hi)])
+
+                    def body(carry, p_i):
+                        xx, aa = carry
+                        xo, a = blk(xx, p_i)
+                        return (xo, aa + a), None
+
+                    (x, aux_total), _ = jax.lax.scan(
+                        body, (x, aux_total), stacked)
+        x = L.rmsnorm(x, params["ln_f"], arch.norm_eps)
+        return x, aux_total, label_mask, cache
+
+    def forward(params, batch):
+        x, aux_total, label_mask, _ = features(params, batch, use_remat=False)
+        if arch.tie_embeddings:
+            logits = L.unembed(x, params["emb"], ctx, real_vocab=arch.vocab)
+        else:
+            logits = ctx.constrain(x @ ctx.cast(params["head"]),
+                                   Ax.BATCH, None, Ax.VOCAB_ACT)
+            logits = L.mask_vocab_pad(logits, arch.vocab)
+        return logits, aux_total, label_mask
+
+    def prefill(params, batch):
+        """Serving prefill: last-token logits + populated decode cache."""
+        x, _, _, cache = features(params, batch, collect_cache=True,
+                                  use_remat=False)
+        last = x[:, -1:]
+        if arch.tie_embeddings:
+            logits = L.unembed(last, params["emb"], ctx, real_vocab=arch.vocab)
+        else:
+            logits = L.mask_vocab_pad(last @ ctx.cast(params["head"]),
+                                      arch.vocab)
+        if arch.is_encoder_only:
+            # encoder: the "served" artifact is the full frame logits
+            logits = ctx.constrain(x @ ctx.cast(params["head"]),
+                                   Ax.BATCH, Ax.SEQ, None)
+            logits = L.mask_vocab_pad(logits, arch.vocab)
+            return logits, {}
+        return logits, cache
+
+    def loss(params, batch):
+        x, aux, label_mask, _ = features(params, batch)
+        pl = prefix_len(arch)
+        if pl:
+            x = x[:, pl:]
+        labels = batch["labels"]
+        mask = None
+        if arch.family == "audio":
+            mask = label_mask[None].astype(jnp.float32) * jnp.ones(
+                labels.shape, jnp.float32)
+        emb_or_head = params["emb"] if arch.tie_embeddings else params["head"]
+        l = L.lm_loss_chunked(x, emb_or_head, labels, ctx,
+                              tied=arch.tie_embeddings, mask=mask,
+                              real_vocab=arch.vocab)
+        return l + AUX_LOSS_W * aux
+
+    def make_cache_decls(batch_size: int, max_len: int):
+        assert not arch.is_encoder_only, "encoder-only arch has no decode"
+        cache = {}
+        for i in range(arch.n_layers):
+            entry = {}
+            if arch.n_heads:
+                entry["kv"] = A.cache_decls(arch, batch_size, max_len,
+                                            jnp.dtype(ctx.compute_dtype))
+            if arch.family in ("ssm", "hybrid"):
+                entry["ssm"] = S.ssm_state_decls(arch, batch_size)
+            cache[f"layer_{i}"] = entry
+        return cache
+
+    def decode_step(params, cache, token, t):
+        """token: [b, 1] int32; t: scalar position. -> (logits, new_cache)."""
+        x = L.embed_lookup(token, params["emb"], ctx)
+        x = ctx.constrain(x, Ax.BATCH, None, None)
+        positions = jnp.full((1,), t, jnp.int32)
+        new_cache = {}
+        for i in range(arch.n_layers):
+            x, _, nc = _block(x, params[f"layer_{i}"], arch, i, ctx,
+                              positions=positions,
+                              cache=cache[f"layer_{i}"], t=t)
+            new_cache[f"layer_{i}"] = nc
+        x = L.rmsnorm(x, params["ln_f"], arch.norm_eps)
+        if arch.tie_embeddings:
+            logits = L.unembed(x, params["emb"], ctx, real_vocab=arch.vocab)
+        else:
+            logits = L.mask_vocab_pad(x @ ctx.cast(params["head"]), arch.vocab)
+        return logits, new_cache
+
+    bundle = ModelBundle(arch=arch, ctx=ctx, decls=decls, forward=forward,
+                         prefill=prefill, loss=loss,
+                         make_cache_decls=make_cache_decls,
+                         decode_step=decode_step)
+    bundle._features = features   # backbone features (used by plasticity)
+    return bundle
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig, ctx: ShardingCtx) -> dict:
+    """Abstract inputs for every model input of the given shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    pl = prefix_len(arch)
+    if shape.kind in ("train", "prefill"):
+        if arch.family == "audio":
+            specs = dict(
+                frames=jax.ShapeDtypeStruct((B, S, arch.frame_dim), jnp.float32),
+                labels=jax.ShapeDtypeStruct((B, S), jnp.int32),
+            )
+        elif arch.vit_dim:
+            specs = dict(
+                tokens=jax.ShapeDtypeStruct((B, S - pl), jnp.int32),
+                patch_embeds=jax.ShapeDtypeStruct(
+                    (B, arch.n_patches, arch.vit_dim), jnp.float32),
+                labels=jax.ShapeDtypeStruct((B, S - pl), jnp.int32),
+            )
+        else:
+            specs = dict(
+                tokens=jax.ShapeDtypeStruct((B, S - pl), jnp.int32),
+                labels=jax.ShapeDtypeStruct((B, S - pl), jnp.int32),
+            )
+        if shape.kind == "prefill":
+            specs.pop("labels")
+        return specs
+    # decode
+    return dict(token=jax.ShapeDtypeStruct((B, 1), jnp.int32))
+
+
+def input_shardings(arch: ArchConfig, shape: ShapeConfig, ctx: ShardingCtx) -> dict:
+    specs = input_specs(arch, shape, ctx)
+    out = {}
+    for k, v in specs.items():
+        axes = (Ax.BATCH,) + (None,) * (v.ndim - 1)
+        out[k] = ctx.act_sharding(axes, v.shape)
+    return out

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (  # noqa: F401
+    Ax, ShardingCtx, ParamDecl, init_params, abstract_params, tree_pspecs,
+)

@@ -1,0 +1,59 @@
+"""Gradient compression with error feedback for the cross-pod all-reduce.
+
+At multi-pod scale the only inter-pod collective is the data-parallel
+gradient all-reduce over the ``pod`` axis (DESIGN.md §4). Int8 quantization
+with per-tensor scale cuts that traffic 4x (vs fp32 moments) / 2x (vs bf16);
+the *error-feedback* accumulator re-injects the quantization residual into
+the next step's gradient, which keeps SGD/Adam convergence (Seide et al.
+1-bit SGD; Karimireddy et al. EF-SGD).
+
+``compress``/``decompress`` are pure functions usable inside the jitted
+train step; ``ef_transform_grads`` wraps a gradient tree with the error
+state. The quantized all-reduce itself is expressed as sum-of-dequantized
+(XLA lowers the pod-axis psum on the int8->fp32 product); on hardware with
+int8 collectives the same interface maps 1:1.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g, bits: int = 8):
+    """Per-tensor symmetric int quantization. Returns (q, scale)."""
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(g)) / qmax
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(params):
+    """Zero error-feedback accumulators matching the gradient tree."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_grads(grads, err, bits: int = 8):
+    """Returns (compressed-and-decompressed grads, new error state).
+
+    The returned grads are exactly what every pod would reconstruct after
+    the quantized all-reduce; ``new_err`` carries the residual forward.
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = compress(g32, bits)
+        deq = decompress(q, s)
+        return deq.astype(g.dtype), g32 - deq
+
+    out = jax.tree.map(one, grads, err)
+    new_g = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e

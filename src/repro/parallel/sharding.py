@@ -1,0 +1,232 @@
+"""Logical-axis sharding system.
+
+Every parameter and activation dimension carries a *logical* axis name; two
+rule tables (params vs activations) map logical axes onto mesh axes. This is
+the single source of truth for the distribution strategy:
+
+  * params:  FSDP over ``data`` (embed dim) x tensor-parallel over ``model``
+             (ff / heads_out / vocab / expert dims)  => 256-way param sharding.
+  * acts:    batch over the data axes (incl. ``pod`` in multi-pod), sequence
+             over ``model`` at block boundaries (Megatron-SP) and inside
+             attention (context parallel).
+
+The ``ShardingCtx`` degrades gracefully: with ``mesh=None`` every constraint
+is the identity, so the same model code runs in single-device smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PSpec
+
+from repro.config import MeshConfig
+
+
+class Ax:
+    """Logical axis vocabulary."""
+    # activation axes
+    BATCH = "batch"
+    SEQ = "seq"            # activation sequence (CP/SP sharded)
+    KV_SEQ = "kv_seq"      # KV-cache sequence
+    EMBED_ACT = "embed_act"
+    HEADS_ACT = "heads_act"
+    VOCAB_ACT = "vocab_act"
+    EXPERT_ACT = "expert_act"
+    DP_GROUP = "dp_group"  # leading MoE dispatch-group dim
+    # param axes
+    EMBED = "embed"        # FSDP dim
+    FF = "ff"
+    HEADS_OUT = "heads_out"
+    VOCAB = "vocab"
+    EXPERT = "expert"
+    # neuromorphic axes (BSS-2 machine model)
+    NRN = "neuron"         # synapse columns / neurons
+    ROW = "row"            # synapse rows / drivers
+    INSTANCE = "instance"  # independent chip instances (batch of networks)
+    NONE = None
+
+
+def _rules(mesh_cfg: MeshConfig):
+    data_axes = mesh_cfg.data_axes          # ("data",) or ("pod","data")
+    param_rules = {
+        Ax.EMBED: "data",                   # FSDP: never crosses pods
+        Ax.FF: "model",
+        Ax.HEADS_OUT: "model",
+        Ax.VOCAB: "model",
+        Ax.EXPERT: "model",
+        Ax.NRN: "model",
+        Ax.ROW: None,
+        # buffer-like decls (KV caches, optimizer state aliases, machine state)
+        Ax.BATCH: data_axes,
+        Ax.KV_SEQ: "model",
+        Ax.INSTANCE: data_axes,
+    }
+    act_rules = {
+        Ax.BATCH: data_axes,
+        Ax.SEQ: "model",
+        Ax.KV_SEQ: "model",
+        Ax.EMBED_ACT: None,
+        Ax.HEADS_ACT: None,
+        Ax.VOCAB_ACT: "model",
+        Ax.EXPERT_ACT: "model",
+        Ax.DP_GROUP: data_axes,
+        Ax.NRN: "model",
+        Ax.ROW: None,
+        Ax.INSTANCE: data_axes,
+    }
+    return param_rules, act_rules
+
+
+@dataclass
+class ShardingCtx:
+    """Carries mesh + rules + dtype policy through model code."""
+    mesh: Optional[Mesh] = None
+    mesh_cfg: MeshConfig = field(default_factory=MeshConfig)
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    # dry-run mode: python-unroll every inner loop so HLO cost analysis is
+    # exact (a `while` body is costed once by XLA).
+    unroll: bool = False
+    overrides: dict = field(default_factory=dict)  # hillclimb knobs
+
+    def __post_init__(self):
+        self.param_rules, self.act_rules = _rules(self.mesh_cfg)
+        self.param_rules.update(self.overrides.get("param_rules", {}))
+        self.act_rules.update(self.overrides.get("act_rules", {}))
+
+    # -- spec builders -------------------------------------------------------
+    def _axis_size(self, mesh_axis) -> int:
+        if self.mesh is None:
+            return 1
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        if isinstance(mesh_axis, (tuple, list)):
+            n = 1
+            for a in mesh_axis:
+                n *= sizes[a]
+            return n
+        return sizes[mesh_axis]
+
+    def _pspec(self, axes, rules, shape=None) -> PSpec:
+        """Map logical axes -> mesh axes, dropping mappings the dim size
+        cannot be evenly split over (e.g. batch=1 long-context cells)."""
+        parts = []
+        for i, ax in enumerate(axes):
+            r = rules.get(ax, None) if ax is not None else None
+            if r is not None and shape is not None:
+                if shape[i] % self._axis_size(r) != 0:
+                    r = None
+            parts.append(tuple(r) if isinstance(r, list) else r)
+        return PSpec(*parts)
+
+    def param_pspec(self, axes, shape=None) -> PSpec:
+        return self._pspec(axes, self.param_rules, shape)
+
+    def act_pspec(self, axes, shape=None) -> PSpec:
+        return self._pspec(axes, self.act_rules, shape)
+
+    def param_sharding(self, axes, shape=None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.param_pspec(axes, shape))
+
+    def act_sharding(self, axes, shape=None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.act_pspec(axes, shape))
+
+    # -- activation constraint ----------------------------------------------
+    def constrain(self, x, *axes):
+        """with_sharding_constraint by logical axes (identity without mesh)."""
+        if self.mesh is None:
+            return x
+        assert len(axes) == x.ndim, (axes, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.act_pspec(axes, x.shape)))
+
+    @property
+    def dp_size(self) -> int:
+        """Number of data-parallel groups (for MoE dispatch grouping)."""
+        if self.mesh is None:
+            return 1
+        n = 1
+        for ax in self.mesh_cfg.data_axes:
+            n *= dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[ax]
+        return n
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))["model"]
+
+    def cast(self, p):
+        """Cast a param to the compute dtype."""
+        return p.astype(self.compute_dtype) if p.dtype != self.compute_dtype else p
+
+
+# ---------------------------------------------------------------------------
+# Declarative parameters
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | embed | custom
+    scale: Optional[float] = None
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(decl: ParamDecl, key):
+    if decl.init == "zeros":
+        return jnp.zeros(decl.shape, decl.dtype)
+    if decl.init == "ones":
+        return jnp.ones(decl.shape, decl.dtype)
+    if decl.init == "embed":
+        return jax.random.normal(key, decl.shape, decl.dtype) * 0.02
+    # fan-in scaled normal
+    fan_in = decl.shape[0] if len(decl.shape) == 1 else int(np.prod(decl.shape[:-1]))
+    scale = decl.scale if decl.scale is not None else 1.0 / max(fan_in, 1) ** 0.5
+    return jax.random.normal(key, decl.shape, decl.dtype) * scale
+
+
+def _is_decl(x):
+    return isinstance(x, ParamDecl)
+
+
+def init_params(decls, key, ctx: Optional[ShardingCtx] = None):
+    """Materialize a tree of ParamDecl into arrays (optionally sharded)."""
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=_is_decl)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for decl, k in zip(leaves, keys):
+        arr = _init_leaf(decl, k)
+        if ctx is not None and ctx.mesh is not None:
+            arr = jax.device_put(arr, ctx.param_sharding(decl.axes))
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(decls):
+    """ShapeDtypeStruct tree for .lower() — no allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), decls, is_leaf=_is_decl)
+
+
+def tree_pspecs(decls, ctx: ShardingCtx, as_sharding: bool = True):
+    """PartitionSpec/NamedSharding tree matching a ParamDecl tree."""
+    fn = ctx.param_sharding if as_sharding else ctx.param_pspec
+    return jax.tree.map(lambda d: fn(d.axes, d.shape), decls, is_leaf=_is_decl)
+
+
+def param_bytes(decls) -> int:
+    leaves = jax.tree.leaves(decls, is_leaf=_is_decl)
+    return sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize for d in leaves)

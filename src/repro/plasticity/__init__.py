@@ -1,0 +1,1 @@
+from repro.plasticity.three_factor import HybridReadoutTrainer  # noqa: F401

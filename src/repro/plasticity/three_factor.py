@@ -1,0 +1,125 @@
+"""C1' — the paper's hybrid-plasticity scheme as an LM-framework feature.
+
+BrainScaleS-2's architectural claim: learning rules are *software* running
+on a processor tightly coupled to the substrate, fed by (a) local
+correlation observables and (b) a global scalar factor, writing quantized
+weights with no host round-trip. Translated to the LM framework:
+
+  * substrate      = the (frozen or co-trained) backbone producing features;
+  * correlations   = eligibility e = phi(x) (outer) (onehot(sample) - p),
+                     the local pre/post correlation of the readout;
+  * global factor  = R - <R> with R = [sampled token == label]
+                     (reward-modulated, paper Eqs. 2-3 verbatim);
+  * PPU semantics  = the whole update is one jitted on-device step, and the
+                     readout weights live QUANTIZED (arch.plasticity_bits,
+                     6-bit default like the synapse SRAM) with saturating
+                     writes.
+
+This is three-factor / REINFORCE-style learning — exactly the class of
+rules the PPU was built to run (paper §5 uses the same structure for the
+spiking task). It applies to every assigned architecture because it only
+needs backbone features (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.models.transformer import build_model, prefix_len
+from repro.parallel.sharding import Ax, ParamDecl, ShardingCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ThreeFactorConfig:
+    eta: float = 2.0
+    gamma: float = 0.05          # <R> tracking (paper Eq. 2)
+    w_scale: float = 0.02        # dequant scale per LSB
+    noise: float = 0.0
+    temperature: float = 1.0
+
+
+class PlasticState(NamedTuple):
+    w_q: jnp.ndarray            # [d, V] int8 quantized readout
+    mean_r: jnp.ndarray         # scalar <R>
+    key: jnp.ndarray
+
+
+class HybridReadoutTrainer:
+    """Reward-modulated plasticity on a quantized readout head."""
+
+    def __init__(self, arch: ArchConfig, ctx: Optional[ShardingCtx] = None,
+                 pcfg: ThreeFactorConfig = ThreeFactorConfig()):
+        self.arch = arch
+        self.ctx = ctx or ShardingCtx()
+        self.pcfg = pcfg
+        self.bundle = build_model(arch, self.ctx)
+        self.wmax = 2 ** (arch.plasticity_bits - 1) - 1    # signed 6-bit: 31
+        self._step = jax.jit(self._step_impl)
+
+    def init_state(self, key) -> PlasticState:
+        d, v = self.arch.d_model, self.arch.vocab_padded
+        return PlasticState(
+            w_q=jnp.zeros((d, v), jnp.int8),
+            mean_r=jnp.zeros(()), key=key)
+
+    def _step_impl(self, params, pstate: PlasticState, batch):
+        arch, pcfg = self.arch, self.pcfg
+        # substrate forward (backbone frozen — the "analog core")
+        feats, _, _, _ = _features_of(self.bundle, params, batch)
+        pl_ = prefix_len(arch)
+        if pl_:
+            feats = feats[:, pl_:]
+        labels = batch["labels"]
+        b, s, d = feats.shape
+        phi = feats.reshape(b * s, d).astype(jnp.float32)
+        y = labels.reshape(b * s)
+
+        w = pstate.w_q.astype(jnp.float32) * pcfg.w_scale
+        logits = phi @ w                                    # [N, V]
+        col = jnp.arange(logits.shape[-1])
+        logits = jnp.where(col < arch.vocab, logits, -1e30)
+        p = jax.nn.softmax(logits / pcfg.temperature, axis=-1)
+
+        key, k_samp, k_noise = jax.random.split(pstate.key, 3)
+        samp = jax.random.categorical(k_samp, logits / pcfg.temperature,
+                                      axis=-1)
+        r = (samp == y).astype(jnp.float32)                 # [N]
+        mean_r = pstate.mean_r + pcfg.gamma * (jnp.mean(r) - pstate.mean_r)
+        mod = r - mean_r                                    # Eq. 2/3
+
+        # local eligibility: pre (outer) (post_sampled - expectation)
+        post = jax.nn.one_hot(samp, logits.shape[-1]) - p
+        dw = pcfg.eta * jnp.einsum("n,nd,nv->dv", mod, phi, post) / phi.shape[0]
+        if pcfg.noise:
+            dw = dw + pcfg.noise * jax.random.normal(k_noise, dw.shape)
+
+        # PPU write-back: saturating quantized store
+        w_new = pstate.w_q.astype(jnp.float32) + dw / pcfg.w_scale
+        w_q = jnp.clip(jnp.round(w_new), -self.wmax, self.wmax
+                       ).astype(jnp.int8)
+        metrics = dict(reward=jnp.mean(r), mean_r=mean_r,
+                       acc_greedy=jnp.mean(
+                           (jnp.argmax(logits, -1) == y).astype(jnp.float32)))
+        return PlasticState(w_q=w_q, mean_r=mean_r, key=key), metrics
+
+    def step(self, params, pstate, batch):
+        """One fused on-device hybrid-plasticity step (no host loop)."""
+        return self._step(params, pstate, batch)
+
+    def host_loop_step(self, params, pstate, batch):
+        """Host-in-the-loop baseline: observables cross the host boundary
+        (the pre-BSS2 workflow the paper's architecture eliminates)."""
+        import numpy as np
+        pstate = jax.tree.map(lambda x: jax.device_put(np.asarray(x)), pstate)
+        new, m = self._step(params, pstate, batch)
+        m = {k: np.asarray(v) for k, v in m.items()}
+        return new, m
+
+
+def _features_of(bundle, params, batch):
+    """Backbone features (bundle._features is attached by build_model)."""
+    return bundle._features(params, batch, use_remat=False)

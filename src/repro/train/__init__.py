@@ -1,0 +1,2 @@
+from repro.train.optimizer import adamw_init_decls, adamw_update, sgd_update  # noqa: F401
+from repro.train.steps import make_train_step  # noqa: F401

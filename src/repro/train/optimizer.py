@@ -1,0 +1,92 @@
+"""Pure-JAX optimizers (no external deps): AdamW + SGD-momentum.
+
+Optimizer state is declared with the *same logical axes* as the parameters,
+so first/second moments shard identically to their weights (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamDecl
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def _is_decl(x):
+    return isinstance(x, ParamDecl)
+
+
+def adamw_init_decls(param_decls) -> dict:
+    """Moment declarations mirroring the param tree (zeros, same axes)."""
+    zero = lambda d: ParamDecl(d.shape, d.axes, init="zeros", dtype=d.dtype)
+    return dict(
+        m=jax.tree.map(zero, param_decls, is_leaf=_is_decl),
+        v=jax.tree.map(zero, param_decls, is_leaf=_is_decl),
+        step=ParamDecl((), (), init="zeros", dtype=jnp.int32),
+    )
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig):
+    step = opt_state["step"] + 1
+    lr = _schedule(cfg, opt_state["step"])
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        step_dir = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+        return (p - lr * step_dir).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    # unzip the 3-tuples
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, dict(m=new_m, v=new_v, step=step), dict(grad_norm=gn, lr=lr)
+
+
+def sgd_update(params, grads, opt_state, lr: float = 1e-2, momentum: float = 0.9):
+    def upd(p, g, m):
+        m = momentum * m + g.astype(jnp.float32)
+        return (p - lr * m).astype(p.dtype), m
+    out = jax.tree.map(upd, params, grads, opt_state["m"])
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, dict(m=new_m, step=opt_state["step"] + 1), {}

@@ -1,0 +1,46 @@
+"""Step builders shared by the trainer, the dry-run, and the benchmarks."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelBundle
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(bundle: ModelBundle, opt_cfg: Optional[AdamWConfig] = None,
+                    accum_steps: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With ``accum_steps > 1`` the batch's leading dim is split into
+    microbatches accumulated in a python loop (exact HLO cost; overlappable
+    by XLA's latency-hiding scheduler).
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    grad_fn = jax.value_and_grad(bundle.loss)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def slice_mb(x, i):
+                mb = x.shape[0] // accum_steps
+                return x[i * mb:(i + 1) * mb]
+            loss = 0.0
+            grads = None
+            for i in range(accum_steps):
+                mb = {k: slice_mb(v, i) for k, v in batch.items()}
+                li, gi = grad_fn(params, mb)
+                loss = loss + li / accum_steps
+                if grads is None:
+                    grads = jax.tree.map(lambda g: g / accum_steps, gi)
+                else:
+                    grads = jax.tree.map(lambda a, g: a + g / accum_steps,
+                                         grads, gi)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = dict(loss=loss, **om)
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,153 @@
+"""Training loop with fault tolerance.
+
+Features exercised by tests/test_trainer.py and examples/train_lm.py:
+  * resume-from-checkpoint (params + optimizer + data cursor), bit-exact;
+  * elastic restart: the checkpoint re-places onto a different mesh;
+  * simulated node failure (``fail_at_step``) for the restart test;
+  * optional int8 gradient compression with error feedback;
+  * gradient accumulation (microbatching).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import SyntheticLMPipeline
+from repro.models.transformer import build_model
+from repro.parallel import compress as gc
+from repro.parallel.sharding import (ShardingCtx, abstract_params,
+                                     init_params, tree_pspecs)
+from repro.train.optimizer import AdamWConfig, adamw_init_decls, adamw_update
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (tests / chaos drills)."""
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+    accum_steps: int = 1
+    grad_compress_bits: int = 0      # 0 = off
+    fail_at_step: int = -1           # simulate a crash (before ckpt) at step
+    log_every: int = 10
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, arch: ArchConfig, shape: ShapeConfig,
+                 tcfg: TrainerConfig, ctx: Optional[ShardingCtx] = None):
+        self.arch, self.shape, self.tcfg = arch, shape, tcfg
+        self.ctx = ctx or ShardingCtx()
+        self.bundle = build_model(arch, self.ctx)
+        self.pipeline = SyntheticLMPipeline(arch, shape, seed=tcfg.seed)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=3)
+        self._build_step()
+
+    # -- step ----------------------------------------------------------------
+    def _build_step(self):
+        tcfg = self.tcfg
+        grad_fn = jax.value_and_grad(self.bundle.loss)
+
+        def step_fn(params, opt_state, err, batch):
+            if tcfg.accum_steps == 1:
+                loss, grads = grad_fn(params, batch)
+            else:
+                n = tcfg.accum_steps
+                loss = 0.0
+                grads = None
+                for i in range(n):
+                    mb = {k: v[i * (v.shape[0] // n):(i + 1) * (v.shape[0] // n)]
+                          for k, v in batch.items()}
+                    li, gi = grad_fn(params, mb)
+                    loss = loss + li / n
+                    gi = jax.tree.map(lambda g: g / n, gi)
+                    grads = gi if grads is None else jax.tree.map(
+                        jnp.add, grads, gi)
+            if tcfg.grad_compress_bits:
+                grads, err = gc.ef_compress_grads(grads, err,
+                                                  tcfg.grad_compress_bits)
+            params, opt_state, om = adamw_update(params, grads, opt_state,
+                                                 tcfg.opt)
+            return params, opt_state, err, dict(loss=loss, **om)
+
+        kwargs = {}
+        if self.ctx.mesh is not None:
+            p_sh = tree_pspecs(self.bundle.decls, self.ctx)
+            o_sh = tree_pspecs(adamw_init_decls(self.bundle.decls), self.ctx)
+            e_sh = p_sh if self.tcfg.grad_compress_bits else None
+            kwargs = dict(in_shardings=(p_sh, o_sh, e_sh, None),
+                          out_shardings=(p_sh, o_sh, e_sh, None))
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1, 2), **kwargs)
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params = init_params(self.bundle.decls, key, self.ctx)
+        opt = init_params(adamw_init_decls(self.bundle.decls),
+                          jax.random.PRNGKey(0), self.ctx)
+        err = (gc.ef_init(params) if self.tcfg.grad_compress_bits
+               else jax.tree.map(lambda p: jnp.zeros((), jnp.float32), {}))
+        if not self.tcfg.grad_compress_bits:
+            err = {}
+        return dict(params=params, opt=opt, err=err, step=0)
+
+    def restore_or_init(self):
+        shardings = None
+        if self.ctx.mesh is not None:
+            shardings = dict(
+                params=tree_pspecs(self.bundle.decls, self.ctx),
+                opt=tree_pspecs(adamw_init_decls(self.bundle.decls), self.ctx))
+        step, state = self.ckpt.restore_latest()
+        if state is None:
+            return self.init_state()
+        data_state = state.pop("data")
+        self.pipeline.load_state_dict(data_state)
+        if shardings is not None:
+            for k in ("params", "opt"):
+                flat_s = jax.tree.leaves(shardings[k])
+                # re-place elastically onto the current mesh
+                state[k] = jax.tree.map(
+                    lambda v, s: jax.device_put(jnp.asarray(v), s),
+                    state[k], shardings[k])
+        else:
+            state = jax.tree.map(jnp.asarray, state)
+        state["step"] = int(step)
+        if "err" not in state:
+            state["err"] = {}
+        return state
+
+    # -- loop ----------------------------------------------------------------
+    def train(self, resume: bool = True) -> Dict[str, Any]:
+        st = self.restore_or_init() if resume else self.init_state()
+        params, opt, err = st["params"], st["opt"], st["err"]
+        start = st["step"]
+        history = []
+        for step in range(start, self.tcfg.steps):
+            if step == self.tcfg.fail_at_step:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            batch = self.pipeline.next_batch()
+            t0 = time.perf_counter()
+            params, opt, err, metrics = self.step_fn(params, opt, err, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            history.append(dict(step=step, loss=loss, sec=dt))
+            if step % self.tcfg.log_every == 0:
+                print(f"step {step}: loss {loss:.4f} ({dt*1e3:.0f} ms)",
+                      flush=True)
+            if (step + 1) % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step + 1, dict(
+                    params=params, opt=opt, err=err,
+                    data=self.pipeline.state_dict()))
+        self.ckpt.wait()
+        return dict(params=params, opt=opt, history=history)

@@ -1,0 +1,3 @@
+"""Verification methodology (paper §3): teststand-style MC simulation,
+virtual instances, pre-"tapeout" calibration, playback co-simulation."""
+from repro.verif.mismatch import sample_instance  # noqa: F401

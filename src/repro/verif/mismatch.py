@@ -1,0 +1,78 @@
+"""Virtual instances: fixed-seed Monte-Carlo mismatch realisations.
+
+Paper §3.2.2: "by fixing the MC seed a set of virtual instances can be
+obtained, which can be individually parameterized and analyzed, similar to
+an array of actual in-silicon instances of the design."
+
+``sample_instance(cfg, key, prefix)`` returns the full mismatch realisation
+for ``prefix``-many chips; the same key always yields the same silicon.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.bss2 import BSS2Config
+from repro.core import capmem
+
+# per-parameter mismatch kind: (sigma attribute, additive?)
+_NEURON_SIGMA = {
+    "g_leak": ("sigma_g_leak", False),
+    "tau_syn_exc": ("sigma_tau_syn", False),
+    "tau_syn_inh": ("sigma_tau_syn", False),
+    "v_thres": ("sigma_v_thres", True),
+}
+
+
+def sample_instance(cfg: BSS2Config, key, prefix: Tuple[int, ...] = ()
+                    ) -> Dict:
+    """Mismatch realisation for a (batch of) virtual chip instance(s)."""
+    mm = cfg.mismatch
+    r, c = cfg.n_rows, cfg.n_cols
+    nominal = capmem.nominal(cfg)
+
+    keys = jax.random.split(key, len(capmem.NEURON_PARAMS) + 5)
+    neuron_params = {}
+    for i, name in enumerate(capmem.NEURON_PARAMS):
+        v = jnp.broadcast_to(nominal[name], (*prefix, c))
+        if name in _NEURON_SIGMA:
+            attr, additive = _NEURON_SIGMA[name]
+            sig = getattr(mm, attr)
+            n = jax.random.normal(keys[i], (*prefix, c))
+            v = v + sig * n if additive else v * (1.0 + sig * n)
+        else:
+            n = jax.random.normal(keys[i], (*prefix, c))
+            v = v * (1.0 + mm.sigma_capmem * n)
+        neuron_params[name] = v
+
+    k_wg, k_so, k_co, k_cg, _ = keys[-5:]
+    return dict(
+        neuron_params=neuron_params,
+        weight_gain=1.0 + mm.sigma_weight_gain
+        * jax.random.normal(k_wg, (*prefix, c)),
+        stp_offset=mm.sigma_stp_offset
+        * jax.random.normal(k_so, (*prefix, r)),
+        stp_calib=jnp.full((*prefix, r), 2 ** (cfg.calib_bits - 1),
+                           jnp.int32),           # mid-code before calibration
+        cadc_offset=mm.sigma_cadc_offset
+        * jax.random.normal(k_co, (*prefix, c)),
+        cadc_gain=1.0 + mm.sigma_cadc_gain
+        * jax.random.normal(k_cg, (*prefix, c)),
+    )
+
+
+def ideal_instance(cfg: BSS2Config, prefix: Tuple[int, ...] = ()) -> Dict:
+    """Mismatch-free instance (the 'schematic' simulation)."""
+    r, c = cfg.n_rows, cfg.n_cols
+    nominal = capmem.nominal(cfg)
+    return dict(
+        neuron_params={k: jnp.broadcast_to(v, (*prefix, c))
+                       for k, v in nominal.items()},
+        weight_gain=jnp.ones((*prefix, c)),
+        stp_offset=jnp.zeros((*prefix, r)),
+        stp_calib=jnp.full((*prefix, r), 2 ** (cfg.calib_bits - 1), jnp.int32),
+        cadc_offset=jnp.zeros((*prefix, c)),
+        cadc_gain=jnp.ones((*prefix, c)),
+    )

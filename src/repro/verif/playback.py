@@ -1,0 +1,275 @@
+"""Playback-program co-simulation (paper §2.3 + §3.1, Fig. 2).
+
+On the real system, compiled *playback programs* (timed instruction
+streams) are executed by the FPGA against the chip; the same programs run
+against the RTL simulation, making hardware and simulation transparently
+interchangeable ("it is now possible to transparently execute a playback
+program in simulation or on the physical system and compare the results").
+
+Here the two interchangeable backends are:
+
+  * ``fast`` — the optimized JAX machine model (jit + scan), i.e. the
+    implementation the framework actually uses;
+  * ``ref``  — an independent pure-NumPy re-implementation of the same
+    behavioural equations, written as a straight per-timestep loop.
+
+``execute`` runs a program on either backend and returns an *experiment
+trace* (timestamped read-back records, like the FPGA's trace memory);
+``compare_traces`` diffs two traces — that is the co-simulation check.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.bss2 import BSS2Config
+from repro.core.anncore import AnnCore
+from repro.verif.mismatch import ideal_instance
+
+
+# ---------------------------------------------------------------------------
+# Instruction set
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Instr:
+    op: str                      # WRITE_WEIGHTS | WRITE_ADDRESSES | RUN |
+    #                              INJECT | READ_RATES | READ_WEIGHTS |
+    #                              READ_V | READ_CORR
+    payload: Any = None
+
+
+def write_weights(w) -> Instr:
+    return Instr("WRITE_WEIGHTS", np.asarray(w, np.int8))
+
+
+def write_addresses(a) -> Instr:
+    return Instr("WRITE_ADDRESSES", np.asarray(a, np.int8))
+
+
+def inject(events, addrs=None) -> Instr:
+    """events: [T, R] floats in {0,1} released over the next T steps."""
+    ev = np.asarray(events, np.float32)
+    ad = np.zeros(ev.shape, np.int8) if addrs is None else np.asarray(addrs, np.int8)
+    return Instr("INJECT", (ev, ad))
+
+
+def run(steps: int) -> Instr:
+    return Instr("RUN", int(steps))
+
+
+def read_rates() -> Instr:
+    return Instr("READ_RATES")
+
+
+def read_weights() -> Instr:
+    return Instr("READ_WEIGHTS")
+
+
+def read_v() -> Instr:
+    return Instr("READ_V")
+
+
+def read_corr() -> Instr:
+    return Instr("READ_CORR")
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+class FastBackend:
+    """The production machine model (jit + lax.scan)."""
+
+    def __init__(self, cfg: BSS2Config, inst=None):
+        self.cfg = cfg
+        self.inst = inst or ideal_instance(cfg)
+        self.core = AnnCore(cfg, self.inst)
+        self.state = self.core.init_state()
+        self._pending: List[Tuple[np.ndarray, np.ndarray]] = []
+
+    def execute(self, program: List[Instr]) -> List[Tuple[int, str, np.ndarray]]:
+        trace = []
+        t = 0
+        run_jit = jax.jit(self.core.run)
+        for ins in program:
+            if ins.op == "WRITE_WEIGHTS":
+                self.state = self.state._replace(
+                    syn=self.state.syn._replace(weights=jnp.asarray(ins.payload)))
+            elif ins.op == "WRITE_ADDRESSES":
+                self.state = self.state._replace(
+                    syn=self.state.syn._replace(addresses=jnp.asarray(ins.payload)))
+            elif ins.op == "INJECT":
+                ev, ad = ins.payload
+                self.state, out = run_jit(self.state, jnp.asarray(ev),
+                                          jnp.asarray(ad))
+                t += ev.shape[0]
+                trace.append((t, "SPIKES", np.asarray(out["spikes"])))
+            elif ins.op == "RUN":
+                steps = ins.payload
+                ev = jnp.zeros((steps, self.cfg.n_rows))
+                ad = jnp.zeros((steps, self.cfg.n_rows), jnp.int8)
+                self.state, out = run_jit(self.state, ev, ad)
+                t += steps
+                trace.append((t, "SPIKES", np.asarray(out["spikes"])))
+            elif ins.op == "READ_RATES":
+                trace.append((t, "RATES", np.asarray(self.state.rate_counters)))
+            elif ins.op == "READ_WEIGHTS":
+                trace.append((t, "WEIGHTS", np.asarray(self.state.syn.weights)))
+            elif ins.op == "READ_V":
+                trace.append((t, "V", np.asarray(self.state.neuron.v)))
+            elif ins.op == "READ_CORR":
+                trace.append((t, "CORR", np.asarray(self.state.corr.a_causal)))
+            else:
+                raise ValueError(ins.op)
+        return trace
+
+
+class RefBackend:
+    """Independent straight-loop NumPy implementation of the same machine
+    (LIF + exp term, STP, address-matched synapses, correlation sensors)."""
+
+    def __init__(self, cfg: BSS2Config, inst=None):
+        self.cfg = cfg
+        inst = inst or ideal_instance(cfg)
+        self.p = {k: np.asarray(v) for k, v in inst["neuron_params"].items()}
+        self.gain = np.asarray(inst["weight_gain"])
+        self.stp_offset = np.asarray(inst["stp_offset"])
+        self.stp_calib = np.asarray(inst["stp_calib"])
+        r, c = cfg.n_rows, cfg.n_cols
+        self.w = np.zeros((r, c), np.int8)
+        self.addr = np.zeros((r, c), np.int8)
+        # float32 state: the co-sim target is semantic equivalence with the
+        # fp32 JAX backend, not extended-precision integration
+        f32 = np.float32
+        self.p = {k: v.astype(f32) for k, v in self.p.items()}
+        self.gain = self.gain.astype(f32)
+        self.stp_offset = self.stp_offset.astype(f32)
+        self.v = self.p["e_leak"].copy()
+        self.wad = np.zeros(c, f32)
+        self.i_exc = np.zeros(c, f32)
+        self.i_inh = np.zeros(c, f32)
+        self.refrac = np.zeros(c, f32)
+        self.stp_r = np.ones(r, f32)
+        self.tr_pre = np.zeros(r, f32)
+        self.tr_post = np.zeros(c, f32)
+        self.a_causal = np.zeros((r, c), f32)
+        self.a_acausal = np.zeros((r, c), f32)
+        self.rates = np.zeros(c, f32)
+
+    def _step(self, ev, ad):
+        cfg, p, dt = self.cfg, self.p, self.cfg.dt
+        from repro.core.stp import CALIB_STEP, CALIB_BITS
+        trim = ((self.stp_calib.astype(np.float32) - 2 ** (CALIB_BITS - 1))
+                * np.float32(CALIB_STEP))
+        eff = np.clip(cfg.stp_u * self.stp_r * (1.0 + self.stp_offset - trim),
+                      0.0, 1.5) * ev
+        self.stp_r = np.clip(
+            self.stp_r + (1 - self.stp_r) * (1 - np.exp(-dt / cfg.stp_tau_rec))
+            - cfg.stp_u * self.stp_r * ev, 0.0, 1.0)
+
+        i_cols = np.zeros((2, cfg.n_cols))
+        for half in (0, 1):
+            rows = slice(half, None, 2)
+            match = (self.addr[rows] == ad[rows][:, None])
+            weff = self.w[rows].astype(np.float32) * match
+            i_cols[half] = (weff * eff[rows][:, None]).sum(0) * self.gain
+
+        de = np.exp(-dt / p["tau_syn_exc"])
+        di = np.exp(-dt / p["tau_syn_inh"])
+        self.i_exc = self.i_exc * de + i_cols[0] * 60.0
+        self.i_inh = self.i_inh * di + i_cols[1] * 60.0
+        i_total = self.i_exc - self.i_inh - self.wad
+
+        if cfg.neuron.adex:
+            arg = np.clip((self.v - p["v_thres"]) / p["delta_t"], -20.0, 3.0)
+            i_exp = p["g_leak"] * p["delta_t"] * np.exp(arg)
+        else:
+            i_exp = 0.0
+        tau_m = p["c_mem"] / p["g_leak"]
+        v_inf = p["e_leak"] + (i_total + i_exp) / p["g_leak"]
+        v = v_inf + (self.v - v_inf) * np.exp(-dt / tau_m)
+        w_inf = p["a"] * (self.v - p["e_leak"])
+        wad = w_inf + (self.wad - w_inf) * np.exp(-dt / p["tau_w"])
+
+        in_ref = self.refrac > 0
+        v = np.where(in_ref, p["e_reset"], v)
+        wad = np.where(in_ref, self.wad, wad)
+        spike_v = p["v_thres"] + (2.0 * p["delta_t"] if cfg.neuron.adex else 0.0)
+        spikes = (v > spike_v) & ~in_ref
+        v = np.where(spikes, p["e_reset"], v)
+        wad = np.where(spikes, wad + p["b"], wad)
+        self.refrac = np.where(spikes, p["tau_refrac"],
+                               np.maximum(self.refrac - dt, 0.0))
+        self.v, self.wad = v, wad
+        sp = spikes.astype(np.float32)
+
+        # correlation sensors (nominal scalar tau, as in AnnCore.step)
+        tau = cfg.neuron.tau_syn_exc
+        self.tr_pre = self.tr_pre * np.exp(-dt / tau) + ev
+        self.tr_post = self.tr_post * np.exp(-dt / tau) + sp
+        self.a_causal = np.minimum(
+            self.a_causal + self.tr_pre[:, None] * sp[None, :], 1023.0)
+        self.a_acausal = np.minimum(
+            self.a_acausal + ev[:, None] * self.tr_post[None, :], 1023.0)
+        self.rates += sp
+        return sp
+
+    def execute(self, program: List[Instr]) -> List[Tuple[int, str, np.ndarray]]:
+        trace = []
+        t = 0
+        for ins in program:
+            if ins.op == "WRITE_WEIGHTS":
+                self.w = ins.payload.copy()
+            elif ins.op == "WRITE_ADDRESSES":
+                self.addr = ins.payload.copy()
+            elif ins.op in ("INJECT", "RUN"):
+                if ins.op == "INJECT":
+                    ev, ad = ins.payload
+                else:
+                    ev = np.zeros((ins.payload, self.cfg.n_rows), np.float32)
+                    ad = np.zeros_like(ev, dtype=np.int8)
+                sp = np.stack([self._step(ev[i], ad[i])
+                               for i in range(ev.shape[0])])
+                t += ev.shape[0]
+                trace.append((t, "SPIKES", sp))
+            elif ins.op == "READ_RATES":
+                trace.append((t, "RATES", self.rates.copy()))
+            elif ins.op == "READ_WEIGHTS":
+                trace.append((t, "WEIGHTS", self.w.copy()))
+            elif ins.op == "READ_V":
+                trace.append((t, "V", self.v.copy()))
+            elif ins.op == "READ_CORR":
+                trace.append((t, "CORR", self.a_causal.copy()))
+            else:
+                raise ValueError(ins.op)
+        return trace
+
+
+def execute(program: List[Instr], backend: str, cfg: BSS2Config, inst=None):
+    be = FastBackend(cfg, inst) if backend == "fast" else RefBackend(cfg, inst)
+    return be.execute(program)
+
+
+def compare_traces(a, b, atol=1e-3) -> List[str]:
+    """Diff two experiment traces; returns a list of mismatch descriptions
+    (empty == co-simulation PASS)."""
+    errs = []
+    if len(a) != len(b):
+        errs.append(f"trace length {len(a)} != {len(b)}")
+    for i, ((ta, ka, va), (tb, kb, vb)) in enumerate(zip(a, b)):
+        if ta != tb or ka != kb:
+            errs.append(f"[{i}] header ({ta},{ka}) != ({tb},{kb})")
+            continue
+        va, vb = np.asarray(va, np.float64), np.asarray(vb, np.float64)
+        if va.shape != vb.shape:
+            errs.append(f"[{i}] {ka}@{ta}: shape {va.shape} != {vb.shape}")
+        elif not np.allclose(va, vb, atol=atol, rtol=1e-4):
+            d = np.max(np.abs(va - vb))
+            errs.append(f"[{i}] {ka}@{ta}: max|diff|={d:.3e}")
+    return errs

@@ -1,0 +1,52 @@
+"""MC calibration (paper §3.2.2 / Fig. 4): binary-search trim of the STP
+efficacy offset over virtual driver instances must collapse the offset
+distribution, pre-"tapeout"."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.bss2 import BSS2
+from repro.verif.calibration import (binary_search_calibrate, calibrate_stp,
+                                     measure_stp_offset)
+
+
+def test_fig4_offset_distribution_narrows():
+    # 128 virtual driver instances, as in the paper's Fig. 4
+    key = jax.random.PRNGKey(42)
+    offsets = BSS2.mismatch.sigma_stp_offset * jax.random.normal(key, (128,))
+    codes, metrics = calibrate_stp(BSS2, offsets)
+    assert float(metrics["std_after"]) < 0.4 * float(metrics["std_before"]), \
+        (float(metrics["std_before"]), float(metrics["std_after"]))
+    # residual offset bounded by the 4-bit trim resolution
+    from repro.core.stp import CALIB_STEP
+    assert float(metrics["max_abs_after"]) <= 4 * CALIB_STEP + 1e-6 or \
+        float(jnp.mean(jnp.abs(metrics["after"]))) < CALIB_STEP
+
+
+def test_calibration_is_deterministic():
+    key = jax.random.PRNGKey(7)
+    offsets = 0.25 * jax.random.normal(key, (32,))
+    c1, _ = calibrate_stp(BSS2, offsets)
+    c2, _ = calibrate_stp(BSS2, offsets)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_binary_search_hits_known_target():
+    """Linear measure = 10 - code, decreasing; the search returns the
+    largest code whose measurement stays above target: 9 (val=1); code 10
+    hits exactly 0 and is rejected — residual < 1 LSB either way."""
+    def measure(code):
+        return 10.0 - code.astype(jnp.float32)
+    code = binary_search_calibrate(measure, bits=4, shape=(3,), target=0.0,
+                                   increasing=False)
+    np.testing.assert_array_equal(np.asarray(code), [9, 9, 9])
+    residual = np.asarray(measure(code + 1))
+    assert (np.abs(residual) <= 1.0).all()
+
+
+def test_measure_monotone_in_code():
+    offs = jnp.zeros((1,))
+    vals = [float(measure_stp_offset(BSS2, offs,
+                                     jnp.full((1,), c, jnp.int32))[0])
+            for c in range(16)]
+    assert all(a > b for a, b in zip(vals, vals[1:])), vals

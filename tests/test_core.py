@@ -1,0 +1,186 @@
+"""Unit tests for the BSS-2 machine model (repro.core)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.bss2 import BSS2, BSS2Config
+from repro.core import adex, capmem, correlation, stp, synapse
+from repro.core.anncore import AnnCore
+from repro.core.ppu import VectorUnit
+from repro.core import rules
+from repro.verif.mismatch import ideal_instance, sample_instance
+
+CFG = dataclasses.replace(BSS2.reduced(), n_rows=8, n_cols=8)
+
+
+def _nominal_params(n):
+    return {k: jnp.full((n,), v) for k, v in
+            [(name, getattr(BSS2.neuron, name)) for name in capmem.NEURON_PARAMS]}
+
+
+class TestAdEx:
+    def test_resting_potential(self):
+        p = _nominal_params(4)
+        st = adex.init_state((4,), p)
+        for _ in range(500):
+            st, s = adex.step(st, jnp.zeros(4), jnp.zeros(4), p, 0.2)
+        np.testing.assert_allclose(st.v, p["e_leak"], atol=0.5)
+        assert float(s.sum()) == 0
+
+    def test_step_current_fires(self):
+        p = _nominal_params(1)
+        st = adex.init_state((1,), p)
+        fired = 0.0
+        for _ in range(500):
+            st, s = adex.step(st, jnp.full((1,), 120.0), jnp.zeros(1), p, 0.2)
+            fired += float(s.sum())
+        assert fired >= 1, "strong step current must elicit spikes"
+
+    def test_refractory_blocks(self):
+        p = _nominal_params(1)
+        st = adex.init_state((1,), p)
+        spikes = []
+        for _ in range(2000):
+            st, s = adex.step(st, jnp.full((1,), 400.0), jnp.zeros(1), p, 0.2)
+            spikes.append(float(s[0]))
+        idx = np.flatnonzero(np.asarray(spikes))
+        assert len(idx) >= 2
+        isi = np.diff(idx) * 0.2
+        assert isi.min() >= BSS2.neuron.tau_refrac - 0.3
+
+    def test_adaptation_slows_firing(self):
+        # moderate drive: the filtered synaptic current settles near 500 pA
+        # (rheobase ~380 pA), so the adaptation current w (b=20 pA/spike,
+        # tau_w=100 us) visibly stretches the ISIs
+        p = _nominal_params(1)
+        st = adex.init_state((1,), p)
+        t_spikes = []
+        for t in range(6000):
+            st, s = adex.step(st, jnp.full((1,), 20.0), jnp.zeros(1), p, 0.2)
+            if float(s[0]):
+                t_spikes.append(t)
+        assert len(t_spikes) >= 4
+        isis = np.diff(t_spikes)
+        assert np.mean(isis[-2:]) > 1.2 * isis[0], \
+            "spike-frequency adaptation expected"
+
+
+class TestSynapse:
+    def test_address_matching(self):
+        w = jnp.full((4, 4), 10, jnp.int8)
+        addr = jnp.arange(16, dtype=jnp.int8).reshape(4, 4) % 4
+        ev = jnp.ones((4,))
+        i = synapse.synaptic_current(w, addr, ev, jnp.zeros((4,), jnp.int8), 1.0)
+        # only synapses whose stored address == 0 conduct
+        expect = 10.0 * (np.asarray(addr) == 0).sum(axis=0)
+        np.testing.assert_allclose(np.asarray(i), expect)
+
+    def test_weight_quantization_saturates(self):
+        q = synapse.quantize_weight(jnp.asarray([-5.0, 0.4, 63.7, 99.0]))
+        assert q.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(q), [0, 0, 63, 63])
+
+
+class TestSTP:
+    def test_depression_and_recovery(self):
+        st = stp.init_state((1,))
+        spikes = jnp.ones((1,))
+        code = jnp.full((1,), 8, jnp.int32)
+        offs = jnp.zeros((1,))
+        e1 = stp.efficacy(st, spikes, u=0.5, offset=offs, calib_code=code)
+        st = stp.update(st, spikes, u=0.5, tau_rec=20.0, dt=1.0)
+        e2 = stp.efficacy(st, spikes, u=0.5, offset=offs, calib_code=code)
+        assert float(e2[0]) < float(e1[0]), "paired-pulse depression"
+        # long silence -> full recovery
+        for _ in range(40):
+            st = stp.update(st, jnp.zeros((1,)), u=0.5, tau_rec=20.0, dt=5.0)
+        e3 = stp.efficacy(st, spikes, u=0.5, offset=offs, calib_code=code)
+        np.testing.assert_allclose(float(e3[0]), float(e1[0]), rtol=1e-3)
+
+
+class TestCorrelation:
+    def test_causal_order_detected(self):
+        st = correlation.init_state((), 2, 2)
+        pre = jnp.asarray([1.0, 0.0])
+        post = jnp.asarray([0.0, 0.0])
+        st = correlation.update(st, pre, post, tau_pre=10., tau_post=10., dt=1.)
+        # post fires 3 steps later -> causal credit at synapse (0, 0)
+        for _ in range(2):
+            st = correlation.update(st, jnp.zeros(2), jnp.zeros(2),
+                                    tau_pre=10., tau_post=10., dt=1.)
+        st = correlation.update(st, jnp.zeros(2), jnp.asarray([1.0, 0.0]),
+                                tau_pre=10., tau_post=10., dt=1.)
+        a = np.asarray(st.a_causal)
+        assert a[0, 0] > 0.5 and a[1, 0] == 0.0
+        assert np.asarray(st.a_acausal)[0, 0] < a[0, 0]
+
+    def test_acausal_order_detected(self):
+        st = correlation.init_state((), 1, 1)
+        st = correlation.update(st, jnp.zeros(1), jnp.ones(1),
+                                tau_pre=10., tau_post=10., dt=1.)
+        st = correlation.update(st, jnp.ones(1), jnp.zeros(1),
+                                tau_pre=10., tau_post=10., dt=1.)
+        assert float(st.a_acausal[0, 0]) > float(st.a_causal[0, 0])
+
+
+class TestAnnCore:
+    def test_run_shapes_and_rates(self):
+        inst = ideal_instance(CFG)
+        core = AnnCore(CFG, inst)
+        st = core.init_state()
+        st = st._replace(syn=st.syn._replace(
+            weights=jnp.full((8, 8), 40, jnp.int8)))
+        T = 200
+        ev = (jax.random.uniform(jax.random.PRNGKey(0), (T, 8)) < 0.05
+              ).astype(jnp.float32)
+        addr = jnp.zeros((T, 8), jnp.int8)
+        st2, out = jax.jit(lambda s, e, a: core.run(s, e, a))(st, ev, addr)
+        assert out["spikes"].shape == (T, 8)
+        assert float(st2.rate_counters.sum()) == float(out["spikes"].sum())
+        assert np.isfinite(np.asarray(st2.neuron.v)).all()
+
+    def test_batched_instances(self):
+        inst = sample_instance(CFG, jax.random.PRNGKey(1), prefix=(3,))
+        core = AnnCore(CFG, inst)
+        st = core.init_state((3,))
+        ev = jnp.zeros((50, 3, 8))
+        addr = jnp.zeros((50, 3, 8), jnp.int8)
+        st2, out = core.run(st, ev, addr)
+        assert out["spikes"].shape == (50, 3, 8)
+        # mismatch: resting potentials differ between instances
+        v = np.asarray(st2.neuron.v)
+        assert np.std(v[:, 0]) > 0.01
+
+
+class TestPPU:
+    def test_rule_application_resets_observables(self):
+        inst = ideal_instance(CFG)
+        core = AnnCore(CFG, inst)
+        ppu = VectorUnit(CFG, inst)
+        st = core.init_state()
+        st = st._replace(rate_counters=jnp.full((8,), 5.0),
+                         corr=st.corr._replace(
+                             a_causal=jnp.ones((8, 8)) * 3.0))
+        st2, rs, obs = ppu.apply_rule(
+            rules.homeostasis, st, {}, target_rate=3.0)
+        assert float(st2.rate_counters.sum()) == 0.0
+        assert float(st2.corr.a_causal.sum()) == 0.0
+        assert (np.asarray(st2.syn.weights) >= 0).all()
+        assert (np.asarray(st2.syn.weights) <= 63).all()
+
+    def test_rstdp_moves_weights_toward_reward(self):
+        w = jnp.full((4, 4), 20.0)
+        obs = dict(causal=jnp.full((4, 4), 100, jnp.int32),
+                   acausal=jnp.zeros((4, 4), jnp.int32),
+                   rates=jnp.zeros((4,)))
+        rs = dict(mean_reward=jnp.zeros((4,)), key=jax.random.PRNGKey(0))
+        reward = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+        w2, rs2 = rules.rstdp(w, obs, rs, reward=reward, noise=0.0, eta=1.0)
+        dw = np.asarray(w2 - w)
+        assert (dw[:, :2] > 0).all(), "rewarded neurons potentiate"
+        np.testing.assert_allclose(dw[:, 2:], 0.0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(rs2["mean_reward"]),
+                                   0.3 * np.asarray(reward))

@@ -1,0 +1,59 @@
+"""C1' hybrid-plasticity LM trainer: the three-factor rule on a quantized
+readout must learn the synthetic Markov structure, fully on-device."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ShapeConfig, get_arch, ASSIGNED_ARCHS
+from repro.data.pipeline import SyntheticLMPipeline
+from repro.parallel.sharding import init_params
+from repro.plasticity.three_factor import HybridReadoutTrainer, \
+    ThreeFactorConfig
+
+SHAPE = ShapeConfig("smoke", 32, 4, "train")
+
+
+def test_three_factor_learns_markov_readout():
+    arch = get_arch("smollm-360m").reduced()
+    tr = HybridReadoutTrainer(arch, pcfg=ThreeFactorConfig(eta=4.0))
+    params = init_params(tr.bundle.decls, jax.random.PRNGKey(0))
+    pipe = SyntheticLMPipeline(arch, SHAPE, seed=0)
+    st = tr.init_state(jax.random.PRNGKey(1))
+    accs = []
+    for i in range(100):
+        st, m = tr.step(params, st, pipe.next_batch())
+        accs.append(float(m["acc_greedy"]))
+    # sampled-match rewards are sparse on a ~500-way task, so three-factor
+    # learning is slow (the paper's own task is 16 binary neurons) — the
+    # criterion is a clear multiple of chance (1/vocab ~ 0.002), not
+    # supervised-level accuracy
+    chance = 1.0 / arch.vocab
+    assert np.mean(accs[-10:]) > 8 * chance, (chance, np.mean(accs[-10:]))
+    assert np.mean(accs[-10:]) > np.mean(accs[:5]) + 0.01
+    # weights stay within the signed 6-bit envelope (saturating writes)
+    assert int(jnp.max(st.w_q)) <= 31 and int(jnp.min(st.w_q)) >= -31
+
+
+def test_mean_reward_tracks(paper_gamma=0.05):
+    arch = get_arch("qwen1.5-0.5b").reduced()
+    tr = HybridReadoutTrainer(arch)
+    params = init_params(tr.bundle.decls, jax.random.PRNGKey(0))
+    pipe = SyntheticLMPipeline(arch, SHAPE, seed=3)
+    st = tr.init_state(jax.random.PRNGKey(1))
+    for _ in range(5):
+        st, m = tr.step(params, st, pipe.next_batch())
+    assert 0.0 <= float(st.mean_r) <= 1.0
+
+
+@pytest.mark.parametrize("name", ["mamba2-130m", "hymba-1.5b",
+                                  "moonshot-v1-16b-a3b"])
+def test_applies_across_families(name):
+    """DESIGN.md §6: the scheme is architecture-agnostic."""
+    arch = get_arch(name).reduced()
+    tr = HybridReadoutTrainer(arch)
+    params = init_params(tr.bundle.decls, jax.random.PRNGKey(0))
+    pipe = SyntheticLMPipeline(arch, SHAPE, seed=0)
+    st = tr.init_state(jax.random.PRNGKey(1))
+    st, m = tr.step(params, st, pipe.next_batch())
+    assert np.isfinite(float(m["reward"]))

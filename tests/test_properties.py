@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import dataclasses
+
+import hypothesis
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stp, synapse, correlation
+from repro.parallel import compress as gc
+from repro.models.layers import apply_rope
+from repro.checkpoint.ckpt import _flatten, _unflatten
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+floats32 = st.floats(-1e6, 1e6, allow_nan=False, width=32)
+
+
+class TestWeightQuantization:
+    @given(hnp.arrays(np.float32, hnp.array_shapes(max_dims=2, max_side=8),
+                      elements=floats32))
+    def test_bounded_and_idempotent(self, w):
+        q = synapse.quantize_weight(jnp.asarray(w))
+        qn = np.asarray(q)
+        assert qn.min() >= 0 and qn.max() <= synapse.WMAX
+        q2 = synapse.quantize_weight(q.astype(jnp.float32))
+        np.testing.assert_array_equal(np.asarray(q2), qn)
+
+    @given(st.floats(0, 63, allow_nan=False),
+           st.floats(0, 63, allow_nan=False))
+    def test_monotone(self, a, b):
+        qa = int(synapse.quantize_weight(jnp.float32(a)))
+        qb = int(synapse.quantize_weight(jnp.float32(b)))
+        if a <= b:
+            assert qa <= qb
+
+
+class TestSTPInvariants:
+    @given(hnp.arrays(np.float32, (12, 4),
+                      elements=st.sampled_from([0.0, 1.0])),
+           st.floats(0.05, 0.9), st.floats(1.0, 100.0))
+    def test_resources_stay_in_unit_interval(self, spikes, u, tau):
+        state = stp.init_state((4,))
+        for t in range(spikes.shape[0]):
+            state = stp.update(state, jnp.asarray(spikes[t]), u=u,
+                               tau_rec=tau, dt=1.0)
+            r = np.asarray(state.r)
+            assert (r >= 0).all() and (r <= 1).all()
+
+    @given(st.floats(0.05, 0.9))
+    def test_efficacy_depresses_on_consecutive_spikes(self, u):
+        state = stp.init_state((1,))
+        ones = jnp.ones((1,))
+        code = jnp.full((1,), 8, jnp.int32)
+        offs = jnp.zeros((1,))
+        last = None
+        for _ in range(5):
+            e = float(stp.efficacy(state, ones, u=u, offset=offs,
+                                   calib_code=code)[0])
+            if last is not None:
+                assert e <= last + 1e-6
+            last = e
+            state = stp.update(state, ones, u=u, tau_rec=50.0, dt=0.5)
+
+
+class TestCorrelationInvariants:
+    @given(hnp.arrays(np.float32, (10, 3),
+                      elements=st.sampled_from([0.0, 1.0])),
+           hnp.arrays(np.float32, (10, 5),
+                      elements=st.sampled_from([0.0, 1.0])))
+    def test_accumulators_nonneg_bounded_monotone(self, pre, post):
+        s = correlation.init_state((), 3, 5)
+        prev_c = np.zeros((3, 5))
+        for t in range(10):
+            s = correlation.update(s, jnp.asarray(pre[t]),
+                                   jnp.asarray(post[t]),
+                                   tau_pre=5., tau_post=5., dt=1., sat=100.)
+            c = np.asarray(s.a_causal)
+            assert (c >= prev_c - 1e-6).all(), "causal accum is monotone"
+            assert c.max() <= 100.0 + 1e-6
+            prev_c = c
+
+
+class TestCompression:
+    @given(hnp.arrays(np.float32, st.integers(1, 256).map(lambda n: (n,)),
+                      elements=st.floats(-1e3, 1e3, allow_nan=False,
+                                         width=32)))
+    def test_roundtrip_error_bounded_by_half_step(self, g):
+        q, s = gc.compress(jnp.asarray(g), bits=8)
+        back = np.asarray(gc.decompress(q, s))
+        step = float(s)
+        assert np.abs(back - g).max() <= step * 0.5 + 1e-6
+
+
+class TestRoPE:
+    @given(st.integers(0, 10000), st.integers(1, 8))
+    def test_rotation_preserves_norm(self, pos, h):
+        x = jax.random.normal(jax.random.PRNGKey(h), (1, 4, h, 16))
+        pos_arr = jnp.full((4,), pos)
+        y = apply_rope(x, pos_arr, theta=10000.0)
+        nx = np.linalg.norm(np.asarray(x), axis=-1)
+        ny = np.linalg.norm(np.asarray(y), axis=-1)
+        np.testing.assert_allclose(nx, ny, rtol=1e-4)
+
+    def test_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, 32))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+        def dot_at(m, n):
+            qm = apply_rope(q, jnp.asarray([m]), 10000.0)
+            kn = apply_rope(k, jnp.asarray([n]), 10000.0)
+            return float(jnp.sum(qm * kn))
+        assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+        assert abs(dot_at(7, 7) - dot_at(0, 0)) < 1e-3
+
+
+_tree_strategy = st.recursive(
+    st.dictionaries(st.text(st.characters(min_codepoint=97, max_codepoint=122),
+                            min_size=1, max_size=4),
+                    st.just(np.arange(3)), min_size=1, max_size=3),
+    lambda children: st.dictionaries(
+        st.text(st.characters(min_codepoint=97, max_codepoint=122),
+                min_size=1, max_size=4), children, min_size=1, max_size=3),
+    max_leaves=8)
+
+
+class TestCheckpointTree:
+    @given(_tree_strategy)
+    def test_flatten_unflatten_roundtrip(self, tree):
+        flat = _flatten(tree)
+        back = _unflatten(flat)
+        def eq(a, b):
+            if isinstance(a, dict):
+                assert set(a) == set(b)
+                for k in a:
+                    eq(a[k], b[k])
+            else:
+                np.testing.assert_array_equal(a, b)
+        eq(tree, back)
+
+
+class TestCalibrationProperty:
+    @given(st.floats(-0.5, 0.5), st.floats(0.01, 0.2))
+    def test_binary_search_residual_bounded(self, target_off, slope):
+        from repro.verif.calibration import binary_search_calibrate
+        def measure(code):
+            return target_off - slope * code.astype(jnp.float32)
+        code = binary_search_calibrate(measure, bits=4, shape=(),
+                                       target=0.0, increasing=False)
+        resid = float(measure(code))
+        # residual is within one step above target (or code railed at 0/15)
+        c = int(code)
+        if 0 < c < 15:
+            assert -1e-6 <= resid <= slope + 1e-6

@@ -1,0 +1,92 @@
+"""Roofline/analysis unit tests: HLO parsing, cell matrix accounting."""
+import numpy as np
+
+from repro.analysis.roofline import (collective_seconds, entry_computation,
+                                     hbm_bytes_estimate, model_flops_for,
+                                     parse_collectives)
+from repro.config import ASSIGNED_ARCHS, SHAPES, cell_applicable, get_arch
+
+FAKE_HLO = """
+%fused_computation.1 {
+  %p0 = f32[1024,1024]{1,0} parameter(0)
+  %e = f32[1024,1024]{1,0} exponential(%p0)
+  ROOT %m = f32[1024,1024]{1,0} multiply(%e, %e)
+}
+
+ENTRY %main.1 (p0: f32[1024,1024]) -> f32[1024,1024] {
+  %p0 = f32[1024,1024]{1,0} parameter(0)
+  %ag = bf16[64,2048]{1,0} all-gather(bf16[4,2048]{1,0} %x), replica_groups={}
+  %ar = f32[1024,1024]{1,0} all-reduce(f32[1024,1024]{1,0} %p0), to_apply=%add
+  %rs = f32[64,1024]{1,0} reduce-scatter(f32[1024,1024]{1,0} %ar), dimensions={0}
+  %cp = u8[128]{0} collective-permute(u8[128]{0} %y), source_target_pairs={}
+  %fus = f32[1024,1024]{1,0} fusion(%p0), kind=kLoop, calls=%fused_computation.1
+  %bc = f32[1024,1024]{1,0} bitcast(%fus)
+  ROOT %out = f32[1024,1024]{1,0} add(%bc, %p0)
+}
+"""
+
+
+class TestCollectiveParsing:
+    def test_kinds_and_bytes(self):
+        c = parse_collectives(FAKE_HLO)
+        assert c["all-gather"]["count"] == 1
+        assert c["all-gather"]["bytes"] == 64 * 2048 * 2
+        assert c["all-reduce"]["bytes"] == 1024 * 1024 * 4
+        # reduce-scatter counts the (larger) operand side
+        assert c["reduce-scatter"]["bytes"] == 1024 * 1024 * 4
+        assert c["collective-permute"]["bytes"] == 128
+
+    def test_ring_model(self):
+        c = parse_collectives(FAKE_HLO)
+        s = collective_seconds(c, link_bw=50e9, links=4)
+        # all-reduce weighted 2x in the effective model
+        assert s["bytes_effective"] > s["bytes_simple"]
+        assert s["sec_simple"] == s["bytes_simple"] / 200e9
+
+
+class TestEntryBytes:
+    def test_fusion_internals_excluded(self):
+        est = hbm_bytes_estimate(FAKE_HLO)
+        # entry ops: all-gather + all-reduce + reduce-scatter + permute +
+        # fusion + add results; the exponential/multiply INSIDE the fusion
+        # and the bitcast/parameters contribute nothing
+        ent = entry_computation(FAKE_HLO)
+        assert "exponential" not in est["by_kind"]
+        assert "fusion" in est["by_kind"]
+        assert est["by_kind"]["fusion"] == 1024 * 1024 * 4
+        assert "bitcast" not in est["by_kind"]
+
+
+class TestCellMatrix:
+    def test_40_cells_31_runnable(self):
+        total = runnable = 0
+        for a in ASSIGNED_ARCHS:
+            arch = get_arch(a)
+            for s in SHAPES.values():
+                total += 1
+                ok, reason = cell_applicable(arch, s)
+                runnable += ok
+                if not ok:
+                    assert reason
+        assert total == 40
+        assert runnable == 31
+        # exactly: hubert skips 2 decode shapes; 8 full-attn archs skip
+        # long_500k; mamba2+hymba run it
+        assert cell_applicable(get_arch("mamba2-130m"), SHAPES["long_500k"])[0]
+        assert cell_applicable(get_arch("hymba-1.5b"), SHAPES["long_500k"])[0]
+        assert not cell_applicable(get_arch("hubert-xlarge"),
+                                   SHAPES["decode_32k"])[0]
+
+    def test_model_flops_scales(self):
+        arch = get_arch("phi4-mini-3.8b")
+        tr = model_flops_for(arch, SHAPES["train_4k"])
+        pf = model_flops_for(arch, SHAPES["prefill_32k"])
+        dc = model_flops_for(arch, SHAPES["decode_32k"])
+        assert tr == 6 * arch.active_param_count() * 256 * 4096
+        assert pf == 2 * arch.active_param_count() * 32 * 32768
+        assert dc == 2 * arch.active_param_count() * 128
+
+    def test_moe_active_vs_total(self):
+        m = get_arch("moonshot-v1-16b-a3b")
+        assert m.active_param_count() < 0.25 * m.param_count()
+        assert m.active_param_count() > 0

@@ -1,0 +1,58 @@
+"""The scan-over-segments forward must equal the unrolled forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ShapeConfig, get_arch
+from repro.models.transformer import build_model, input_specs, _layer_segments
+from repro.parallel.sharding import ShardingCtx, init_params
+
+SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+def _batch(arch, key):
+    specs = input_specs(arch, SHAPE, None)
+    batch = {}
+    for k, v in specs.items():
+        if v.dtype == jnp.int32:
+            batch[k] = jax.random.randint(key, v.shape, 0, arch.vocab,
+                                          jnp.int32)
+        else:
+            batch[k] = jax.random.normal(key, v.shape, v.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("name", ["smollm-360m", "moonshot-v1-16b-a3b",
+                                  "hymba-1.5b", "mamba2-130m",
+                                  "hubert-xlarge"])
+def test_scan_equals_unrolled(name):
+    arch = get_arch(name).reduced()
+    ctx_scan = ShardingCtx(unroll=False)
+    ctx_unroll = ShardingCtx(unroll=True)
+    b_scan = build_model(arch, ctx_scan)
+    b_unroll = build_model(arch, ctx_unroll)
+    params = init_params(b_scan.decls, jax.random.PRNGKey(0))
+    batch = _batch(arch, jax.random.PRNGKey(1))
+
+    l_scan = float(jax.jit(b_scan.loss)(params, batch))
+    l_unroll = float(jax.jit(b_unroll.loss)(params, batch))
+    np.testing.assert_allclose(l_scan, l_unroll, rtol=1e-4)
+
+    g_scan = jax.jit(jax.grad(b_scan.loss))(params, batch)
+    g_unroll = jax.jit(jax.grad(b_unroll.loss))(params, batch)
+    for a, b in zip(jax.tree.leaves(g_scan), jax.tree.leaves(g_unroll)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_segments_cover_all_layers():
+    for name in ("hymba-1.5b", "moonshot-v1-16b-a3b", "phi4-mini-3.8b"):
+        arch = get_arch(name)
+        segs = _layer_segments(arch)
+        covered = []
+        for lo, hi, kind in segs:
+            covered.extend(range(lo, hi))
+        assert covered == list(range(arch.n_layers)), (name, segs)

@@ -1,0 +1,73 @@
+"""End-to-end system tests: multiple subsystems composed, as a user would."""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ShapeConfig, get_arch
+
+
+def test_calibrate_then_learn_end_to_end():
+    """verif (MC calibration) -> core (machine model) -> rules (R-STDP):
+    the §3.2 + §5 pipeline in one pass."""
+    from repro.configs.bss2 import BSS2
+    from repro.core.hybrid import run_training
+    from repro.verif.calibration import calibrate_stp
+    from repro.verif.mismatch import sample_instance
+
+    cfg = dataclasses.replace(BSS2.reduced(), n_rows=32, n_cols=16)
+    inst = sample_instance(cfg, jax.random.PRNGKey(7))
+    codes, metrics = calibrate_stp(cfg, inst["stp_offset"])
+    assert float(metrics["std_after"]) < float(metrics["std_before"])
+
+    out, state, meta = run_training(n_trials=200, seed=0)
+    mr = out["mean_reward"]
+    assert float(np.mean(np.median(mr[-60:], axis=1))) > 0.7
+
+
+def test_train_checkpoint_serve_roundtrip():
+    """train (AdamW, ckpt) -> checkpoint restore -> serve (generate)."""
+    from repro.serve.engine import ServeEngine
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+    from repro.checkpoint import restore_checkpoint
+
+    arch = get_arch("qwen1.5-0.5b").reduced()
+    shape = ShapeConfig("smoke", 32, 4, "train")
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainerConfig(steps=12, ckpt_every=6, ckpt_dir=d,
+                             log_every=100,
+                             opt=AdamWConfig(lr=1e-3, warmup_steps=2))
+        tr = Trainer(arch, shape, tcfg)
+        out = tr.train()
+        assert out["history"][-1]["loss"] < out["history"][0]["loss"]
+
+        step, state = restore_checkpoint(d)
+        assert step == 12
+        params = jax.tree.map(jnp.asarray, state["params"])
+        eng = ServeEngine(arch, max_len=64)
+        gen = eng.generate(params, jnp.ones((2, 8), jnp.int32), n_new=5)
+        assert gen.shape == (2, 5)
+        assert (gen >= 0).all() and (gen < arch.vocab_padded).all()
+
+
+def test_hybrid_plasticity_on_lm_end_to_end():
+    """C1' three-factor trainer on an SSM arch (paper technique beyond the
+    neuromorphic substrate), fused on device."""
+    from repro.data.pipeline import SyntheticLMPipeline
+    from repro.parallel.sharding import init_params
+    from repro.plasticity.three_factor import HybridReadoutTrainer
+
+    arch = get_arch("mamba2-130m").reduced()
+    tr = HybridReadoutTrainer(arch)
+    params = init_params(tr.bundle.decls, jax.random.PRNGKey(0))
+    pipe = SyntheticLMPipeline(arch, ShapeConfig("s", 32, 4, "train"), seed=0)
+    st = tr.init_state(jax.random.PRNGKey(1))
+    rewards = []
+    for _ in range(30):
+        st, m = tr.step(params, st, pipe.next_batch())
+        rewards.append(float(m["reward"]))
+    assert np.isfinite(rewards).all()
+    assert int(jnp.max(jnp.abs(st.w_q))) <= 31  # 6-bit signed envelope
