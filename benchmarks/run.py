@@ -3,13 +3,36 @@
   fig4_calibration     paper Fig. 4  (MC calibration narrows STP offsets)
   fig8_event_interface paper Fig. 8  (event-bus integrity, adapted)
   fig11_rstdp          paper Fig. 11 (R-STDP reward -> ~1 @ 40% overlap)
-  step_time            paper §5     (290us claim: on-device vs host loop)
+  step_time            paper §5     (290us claim: scan vs dispatch vs host)
   kernels              Pallas hot-spot microbenchmarks
   roofline             §Roofline table from the dry-run artifacts
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [suite] [--json BENCH_x.json]
+
+``--json`` persists the machine-readable results (the bench trajectory
+across PRs); without it results are print-only.
 """
+import argparse
+import json
 import sys
 import time
 import traceback
+
+
+def _jsonable(x):
+    """Best-effort conversion of numpy/jax scalars and containers."""
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if hasattr(x, "item") and getattr(x, "ndim", 1) == 0:
+        return x.item()
+    if hasattr(x, "tolist"):
+        return x.tolist()
+    if isinstance(x, (int, float, str, bool)) or x is None:
+        return x
+    return repr(x)
 
 
 def main() -> None:
@@ -24,11 +47,16 @@ def main() -> None:
         ("kernels", kernels_bench.run),
         ("roofline", roofline_table.run),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser()
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run a single suite by name")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="persist machine-readable results to PATH")
+    args = ap.parse_args()
     results = []
     failed = 0
     for name, fn in suites:
-        if only and only != name:
+        if args.only and args.only != name:
             continue
         print(f"\n===== {name} =====", flush=True)
         t0 = time.perf_counter()
@@ -46,6 +74,13 @@ def main() -> None:
         derived = {k: v for k, v in r.items()
                    if k not in ("name", "seconds")}
         print(f"{r['name']},{us:.1f},{derived}")
+    if args.json:
+        payload = dict(timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
+                       argv=sys.argv[1:], failed=failed,
+                       results=_jsonable(results))
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.json}")
     if failed:
         sys.exit(1)
 

@@ -28,29 +28,41 @@ class NeuronState(NamedTuple):
 
 
 def init_state(shape, params) -> NeuronState:
-    z = jnp.zeros(shape, jnp.float32)
+    # distinct buffers per leaf: a shared zeros array would alias leaves
+    # and break buffer donation of the whole state (donate-twice error)
+    def z():
+        return jnp.zeros(shape, jnp.float32)
     return NeuronState(v=jnp.broadcast_to(params["e_leak"], shape).astype(jnp.float32),
-                       w=z, i_exc=z, i_inh=z, refrac=z)
+                       w=z(), i_exc=z(), i_inh=z(), refrac=z())
 
 
 SPIKE_CLAMP = 30.0   # mV above which the exponential term is clamped
 
 
+def decay_factors(params: Dict, dt: float) -> Dict:
+    """Time-invariant per-step decay terms (identical formulas to the ones
+    ``step`` computes inline). Precompute once and pass as ``decays`` to
+    hoist 4 exps + a division per step out of scan loops."""
+    tau_m = params["c_mem"] / params["g_leak"]
+    return dict(de=jnp.exp(-dt / params["tau_syn_exc"]),
+                di=jnp.exp(-dt / params["tau_syn_inh"]),
+                alpha=jnp.exp(-dt / tau_m),
+                aw=jnp.exp(-dt / params["tau_w"]))
+
+
 def step(state: NeuronState, i_syn_exc, i_syn_inh, params: Dict, dt: float,
-         adex: bool = True):
+         adex: bool = True, decays: Dict = None):
     """One dt step. i_syn_*: charge injected this step [pA*us / us = pA].
 
     Returns (new_state, spikes[...,N] float32 in {0,1}).
     """
     g_l = params["g_leak"]
-    c = params["c_mem"]
-    tau_m = c / g_l
+    if decays is None:
+        decays = decay_factors(params, dt)
 
     # synaptic currents: exponential kernels, pulses add instantaneously
-    de = jnp.exp(-dt / params["tau_syn_exc"])
-    di = jnp.exp(-dt / params["tau_syn_inh"])
-    i_exc = state.i_exc * de + i_syn_exc
-    i_inh = state.i_inh * di + i_syn_inh
+    i_exc = state.i_exc * decays["de"] + i_syn_exc
+    i_inh = state.i_inh * decays["di"] + i_syn_inh
 
     i_total = i_exc - i_inh - state.w
 
@@ -63,13 +75,11 @@ def step(state: NeuronState, i_syn_exc, i_syn_inh, params: Dict, dt: float,
         i_exp = 0.0
 
     v_inf = params["e_leak"] + (i_total + i_exp) / g_l
-    alpha = jnp.exp(-dt / tau_m)
-    v = v_inf + (state.v - v_inf) * alpha
+    v = v_inf + (state.v - v_inf) * decays["alpha"]
 
     # adaptation (exponential Euler towards a(V - E_L))
     w_inf = params["a"] * (state.v - params["e_leak"])
-    aw = jnp.exp(-dt / params["tau_w"])
-    w = w_inf + (state.w - w_inf) * aw
+    w = w_inf + (state.w - w_inf) * decays["aw"]
 
     # refractory clamp
     in_refrac = state.refrac > 0.0

@@ -7,6 +7,33 @@ instance dim, so a *batch of independent chips* (virtual instances for MC
 calibration, or parallel experiment seeds) runs as one vectorized program —
 that is how the machine model maps onto the TPU mesh (instances over
 ``data``, synapse columns over ``model``).
+
+Backends
+--------
+``run`` has two implementations, selected by the ``backend`` constructor
+argument (auto-selected like ``repro.kernels/*/ops.py`` selects its impl):
+
+``oracle``
+    The literal per-dt scan of ``step``: every timestep recomputes the
+    address-match mask, materializes two [.., R, C] correlation
+    accumulators, and strided-slices the Dale rows. Ground truth for
+    equivalence tests and the host-style baseline.
+
+``fused`` (the ``auto`` default)
+    The hot path. Exploits two structural facts of the machine:
+    (1) STP efficacy depends only on the *input* events, so the whole
+    efficacy trajectory is precomputed by a cheap [.., R]-wide scan;
+    (2) weights/addresses are constant between PPU writes, so the per-step
+    masked matmul becomes ONE time-batched event x weight matmul (Dale
+    exc/inh rows pre-split once at window entry) routed through the
+    ``synray`` Pallas kernel on TPU. The remaining dt scan touches only
+    [.., C] neuron state, and the correlation-sensor update — which never
+    feeds back into neuron dynamics within a trial — is hoisted out of the
+    scan entirely and applied once per window by the fused
+    ``correlation_window`` kernel (T x fewer HBM round trips).
+
+``kernel_impl`` forwards to the kernel wrappers: ``auto`` (pallas on TPU,
+jnp oracle elsewhere), ``pallas``, ``interpret``, or ``ref``.
 """
 from __future__ import annotations
 
@@ -36,11 +63,27 @@ class AnnCore:
       stp_offset:    [..., R]   driver efficacy offset (Fig. 4)
       stp_calib:     [..., R]   4-bit trim codes
       cadc_offset/cadc_gain: [..., C]
+
+    ``backend``: "auto" | "oracle" | "fused" (see module docstring).
+    ``kernel_impl``: impl forwarded to the Pallas kernel wrappers.
+    ``const_addr``: promise that within any one ``run`` window the event
+    address on each row never changes (each driver row carries a single
+    source, as in the §5 experiment wiring). Lets the fused CPU path
+    resolve the address-match mask once per window into an effective
+    weight matrix instead of re-deriving it per step.
     """
 
-    def __init__(self, cfg: BSS2Config, inst: Dict):
+    def __init__(self, cfg: BSS2Config, inst: Dict, backend: str = "auto",
+                 kernel_impl: str = "auto", const_addr: bool = False):
         self.cfg = cfg
         self.inst = inst
+        if backend == "auto":
+            backend = "fused"
+        if backend not in ("oracle", "fused"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        self.kernel_impl = kernel_impl
+        self.const_addr = const_addr
 
     def init_state(self, prefix=()) -> AnnCoreState:
         cfg = self.cfg
@@ -54,7 +97,7 @@ class AnnCore:
         )
 
     def step(self, state: AnnCoreState, row_spikes, row_addr, ext_current=0.0):
-        """One dt of the full core.
+        """One dt of the full core (the oracle semantics).
 
         row_spikes: [..., R] float {0,1} events entering the drivers;
         row_addr:   [..., R] int8 event addresses;
@@ -94,11 +137,25 @@ class AnnCore:
         return new_state, out_spikes
 
     def run(self, state: AnnCoreState, row_spikes_t, row_addr_t,
-            record_v: bool = False, unroll: int = 1):
+            record_v: bool = False, unroll: Optional[int] = None):
         """Integrate a [T, ..., R] event stream. Returns (state, outputs).
 
         outputs: dict(spikes=[T, ..., C], v=[T, ..., C] if record_v)
+
+        ``unroll=None`` picks the backend default: 1 for the oracle (the
+        literal reference), 4 for the fused path (its dt-scan body is
+        [.., C]-tiny, so moderate unrolling amortizes loop overhead;
+        measured best on the CPU container, larger factors only grow the
+        compiled loop body past cache).
         """
+        if self.backend == "oracle":
+            return self._run_oracle(state, row_spikes_t, row_addr_t,
+                                    record_v=record_v, unroll=unroll or 1)
+        return self._run_fused(state, row_spikes_t, row_addr_t,
+                               record_v=record_v, unroll=unroll or 4)
+
+    def _run_oracle(self, state: AnnCoreState, row_spikes_t, row_addr_t,
+                    record_v: bool = False, unroll: int = 1):
         def body(s, xs):
             sp, ad = xs
             s2, out = self.step(s, sp, ad)
@@ -111,3 +168,72 @@ class AnnCore:
         if record_v:
             out["v"] = recs[1]
         return state, out
+
+    def _run_fused(self, state: AnnCoreState, row_spikes_t, row_addr_t,
+                   record_v: bool = False, unroll: int = 1):
+        cfg = self.cfg
+        dt = cfg.dt
+        inst = self.inst
+
+        # 1. STP efficacy trajectory: depends only on the input events, so
+        #    the whole [T, .., R] trajectory comes out of a cheap scan that
+        #    never touches the [.., R, C] synapse array.
+        def stp_body(s, sp):
+            eff = stp.efficacy(s, sp, u=cfg.stp_u,
+                               offset=inst["stp_offset"],
+                               calib_code=inst["stp_calib"])
+            return stp.update(s, sp, u=cfg.stp_u,
+                              tau_rec=cfg.stp_tau_rec, dt=dt), eff
+
+        new_stp, eff_t = jax.lax.scan(stp_body, state.stp, row_spikes_t,
+                                      unroll=unroll)
+
+        # 2. Dale rows pre-split once per window; synaptic currents for ALL
+        #    timesteps in one event x weight matmul (time = batch axis of
+        #    the synray kernel).
+        syn = state.syn
+        gain = inst["weight_gain"]
+        i_exc_t = synapse.synaptic_current_window(
+            syn.weights[..., 0::2, :], syn.addresses[..., 0::2, :],
+            eff_t[..., 0::2], row_addr_t[..., 0::2], gain,
+            impl=self.kernel_impl, const_addr=self.const_addr)
+        i_inh_t = synapse.synaptic_current_window(
+            syn.weights[..., 1::2, :], syn.addresses[..., 1::2, :],
+            eff_t[..., 1::2], row_addr_t[..., 1::2], gain,
+            impl=self.kernel_impl, const_addr=self.const_addr)
+        # current scaling vectorized over the whole window, not per step
+        i_exc_t = i_exc_t * 60.0
+        i_inh_t = i_inh_t * 60.0
+
+        # 3. The remaining dt scan is neuron-only: O(C) per step; the
+        #    time-invariant decay factors are hoisted out of the loop.
+        decays = adex.decay_factors(inst["neuron_params"], dt)
+
+        def body(carry, xs):
+            neuron, rc = carry
+            ie, ii = xs
+            n2, out = adex.step(neuron, ie, ii, inst["neuron_params"], dt,
+                                adex=cfg.neuron.adex, decays=decays)
+            rec = (out, n2.v) if record_v else (out,)
+            return (n2, rc + out), rec
+
+        (new_neuron, rate_counters), recs = jax.lax.scan(
+            body, (state.neuron, state.rate_counters), (i_exc_t, i_inh_t),
+            unroll=unroll)
+        out_spikes_t = recs[0]
+
+        # 4. Correlation hoisted out of the scan: sensors never feed back
+        #    into the dynamics within a window, so one fused kernel call
+        #    replays the whole T-window per VMEM tile.
+        new_corr = correlation.window(
+            state.corr, row_spikes_t, out_spikes_t,
+            tau_pre=cfg.neuron.tau_syn_exc, tau_post=cfg.neuron.tau_syn_exc,
+            dt=dt, impl=self.kernel_impl)
+
+        new_state = AnnCoreState(neuron=new_neuron, stp=new_stp,
+                                 corr=new_corr, syn=syn,
+                                 rate_counters=rate_counters)
+        out = dict(spikes=out_spikes_t)
+        if record_v:
+            out["v"] = recs[1]
+        return new_state, out

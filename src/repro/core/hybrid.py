@@ -74,11 +74,17 @@ def _patterns(ecfg: RSTDPConfig) -> Tuple[np.ndarray, np.ndarray]:
 
 
 def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
-                    instance_key=None, prefix=()):
+                    instance_key=None, prefix=(), backend: str = "auto",
+                    kernel_impl: str = "auto"):
     """Build the experiment closure set. Returns (init_fn, trial_fn, meta).
 
     The machine uses 2 rows per input (exc/inh pair, Dale's law: the PPU
     writes |w| to the row matching the sign — paper §5).
+
+    ``backend``/``kernel_impl`` select the AnnCore emulation path (see
+    repro.core.anncore): "auto" runs the fused hot path — correlation
+    hoisted out of the dt scan, whole-trial synray matmul — with "oracle"
+    kept as the per-step ground truth.
     """
     if cfg is None:
         cfg = dataclasses.replace(
@@ -91,7 +97,11 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     if instance_key is None:
         instance_key = jax.random.PRNGKey(7)
     inst = sample_instance(cfg, instance_key, prefix)
-    core = AnnCore(cfg, inst)
+    # const_addr: every driver row carries exactly one source here (input i
+    # -> rows 2i/2i+1, address 0 throughout), so the fused path may resolve
+    # the address-match mask once per trial
+    core = AnnCore(cfg, inst, backend=backend, kernel_impl=kernel_impl,
+                   const_addr=True)
     ppu = VectorUnit(cfg, inst)
 
     def init(key) -> ExperimentState:
@@ -112,24 +122,27 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
         return syn._replace(weights=synapse.quantize_weight(w_rows))
     _write_signed.__doc__ = "interleave exc/inh rows: row 2i exc, 2i+1 inh"
 
+    # burst schedule is static per experiment — precomputed once here, not
+    # rebuilt inside every (possibly scanned) trial
+    T = ecfg.trial_steps
+    _burst_times = np.linspace(T // 8, T - T // 8, ecfg.pattern_repeats,
+                               dtype=np.float32).astype(np.int64)
+    _dt_to_burst = np.arange(T)[:, None] - _burst_times[None, :]
+    is_burst = jnp.asarray(
+        np.any((_dt_to_burst >= 0) & (_dt_to_burst < ecfg.burst_width),
+               axis=1).astype(np.float32)
+        .reshape(T, *([1] * len(prefix)), 1))
+
     def _gen_events(key, stim):
         """Event stream [T, .., 2I] for stimulus in {0:none, 1:A, 2:B}."""
         kb, kp = jax.random.split(key)
-        T = ecfg.trial_steps
         bg = (jax.random.uniform(kb, (T, *prefix, ecfg.n_inputs))
               < ecfg.bg_prob).astype(jnp.float32)
         # pattern: synchronized bursts on the pattern channels
-        burst_times = jnp.linspace(T // 8, T - T // 8,
-                                   ecfg.pattern_repeats).astype(jnp.int32)
-        t_idx = jnp.arange(T)
-        dt_to_burst = t_idx[:, None] - burst_times[None, :]
-        is_burst = jnp.any((dt_to_burst >= 0)
-                           & (dt_to_burst < ecfg.burst_width), axis=1)
         pat_mask = jnp.where(stim == 1, mask_a,
                              jnp.where(stim == 2, mask_b,
                                        jnp.zeros_like(mask_a)))
-        pat = (is_burst.reshape(T, *([1] * len(prefix)), 1)
-               * pat_mask.reshape(*([1] * (1 + len(prefix))), -1))
+        pat = is_burst * pat_mask.reshape(*([1] * (1 + len(prefix))), -1)
         ch = jnp.clip(bg + pat, 0, 1)
         # input i drives rows 2i (exc) and 2i+1 (inh) with the same events
         ev = jnp.repeat(ch, 2, axis=-1)
@@ -143,11 +156,9 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                                         jnp.zeros_like(even)))
         return jnp.where(own_shown > 0, fired, 1.0 - fired)
 
-    def trial(state: ExperimentState, stim) -> Tuple[ExperimentState, Dict]:
-        """One fused training trial. stim: int32 in {0,1,2} (the PPU's
-        simulated environment picks it upstream or it is scanned over)."""
-        key, k_ev, k_rule = jax.random.split(state.key, 3)
-        ev, addr = _gen_events(k_ev, stim)
+    def _trial_with(state, stim, ev, addr, k_rule, key_next):
+        """Trial body given pregenerated events + keys (shared between the
+        per-trial dispatch path and the whole-experiment scan)."""
         cs, _ = core.run(state.core, ev, addr)
         rates = cs.rate_counters
         r = _reward(rates, stim)
@@ -159,13 +170,46 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                  w_signed=state.w_signed),
             reward=r)
         new = ExperimentState(core=cs2, w_signed=rule_state["w_signed"],
-                              mean_reward=rule_state["mean_reward"], key=key)
+                              mean_reward=rule_state["mean_reward"],
+                              key=key_next)
         elig = (obs["causal"][..., 0::2, :]
                 - obs["acausal"][..., 0::2, :]).astype(jnp.float32) / 255.0
         metrics = dict(reward=r, mean_reward=rule_state["mean_reward"],
                        rates=rates, stim=stim, elig=elig,
                        w=rule_state["w_signed"])
         return new, metrics
+
+    def trial(state: ExperimentState, stim) -> Tuple[ExperimentState, Dict]:
+        """One fused training trial. stim: int32 in {0,1,2} (the PPU's
+        simulated environment picks it upstream or it is scanned over)."""
+        key, k_ev, k_rule = jax.random.split(state.key, 3)
+        ev, addr = _gen_events(k_ev, stim)
+        return _trial_with(state, stim, ev, addr, k_rule, key)
+
+    def scanned_training(state: ExperimentState, stims):
+        """The whole experiment as ONE program: a lax.scan of trials.
+
+        The per-trial PRNG key chain is replayed up front (exactly the
+        stream ``trial`` would consume), so all trials' Poisson background
+        events are generated in ONE batched draw instead of T x n_trials
+        tiny ones — then the scan body is pure emulation + PPU update.
+        Bit-identical to dispatching ``trial`` per trial from Python."""
+        n = stims.shape[0]
+
+        def key_body(k, _):
+            k2, k_ev, k_rule = jax.random.split(k, 3)
+            return k2, (k2, k_ev, k_rule)
+
+        _, (keys_next, k_evs, k_rules) = jax.lax.scan(
+            key_body, state.key, None, length=n)
+        ev_all, addr_all = jax.vmap(_gen_events)(k_evs, stims)
+
+        def body(st, xs):
+            stim, ev, addr, k_rule, key_next = xs
+            return _trial_with(st, stim, ev, addr, k_rule, key_next)
+
+        return jax.lax.scan(body, state,
+                            (stims, ev_all, addr_all, k_rules, keys_next))
 
     def _signed_rule(w_rows, obs, rule_state, *, reward):
         """R-STDP on the signed input-level weights; rewrite both rows."""
@@ -199,30 +243,55 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
             mean_reward=mean_r, key=key, w_signed=w_signed)
 
     meta = dict(cfg=cfg, ecfg=ecfg, inst=inst, core=core, ppu=ppu,
-                mask_a=mask_a, mask_b=mask_b, even=even)
+                mask_a=mask_a, mask_b=mask_b, even=even,
+                scanned_training=scanned_training)
     return init, trial, meta
 
 
+def make_scanned_training(scanned_training):
+    """Jit the whole-experiment program (``meta["scanned_training"]``):
+    ONE dispatch for the full §5 run, state buffers donated, metrics back
+    stacked [n_trials, ...] — the machine-model analogue of the paper's
+    claim that hybrid plasticity removes the host from the training loop
+    entirely."""
+    return jax.jit(scanned_training, donate_argnums=(0,))
+
+
 def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
-                 seed: int = 0, cfg: BSS2Config = None, fused: bool = True):
-    """Full §5 experiment. Returns the metrics history (stacked)."""
+                 seed: int = 0, cfg: BSS2Config = None, fused: bool = True,
+                 scan: bool = None, backend: str = "auto"):
+    """Full §5 experiment. Returns the metrics history (stacked).
+
+    Modes:
+      fused=True, scan=True   ONE jitted lax.scan over all trials (default)
+      fused=True, scan=False  per-trial jit dispatch from a Python loop
+                              (the host-dispatch baseline)
+      fused=False             host-in-the-loop: observables cross the host
+                              boundary every trial (the slow path §5 kills)
+    """
     init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg,
-                                        instance_key=jax.random.PRNGKey(seed))
+                                        instance_key=jax.random.PRNGKey(seed),
+                                        backend=backend)
     state = init(jax.random.PRNGKey(seed + 1))
     stims = jnp.asarray(np.resize([1, 2, 0], n_trials), jnp.int32)
+    if scan is None:
+        scan = fused
 
-    if fused:
+    if fused and scan:
+        scanned = make_scanned_training(meta["scanned_training"])
+        state, hist = scanned(state, stims)
+        out = {k: np.asarray(v) for k, v in hist.items()}
+    else:
         jtrial = jax.jit(trial)
         hist = []
         for i in range(n_trials):
-            state, m = jtrial(state, stims[i])
+            if fused:
+                state, m = jtrial(state, stims[i])
+            else:
+                state, m = host_loop_trial(trial, state, stims[i])
             hist.append(m)
-    else:
-        hist = []
-        for i in range(n_trials):
-            state, m = host_loop_trial(trial, state, stims[i])
-            hist.append(m)
-    out = {k: np.stack([np.asarray(h[k]) for h in hist]) for k in hist[0]}
+        out = {k: np.stack([np.asarray(h[k]) for h in hist])
+               for k in hist[0]}
     out["w_signed_final"] = np.asarray(state.w_signed)
     return out, state, meta
 
@@ -259,7 +328,10 @@ def lower_bss2_cell(shape, ctx, mesh_cfg):
     cfg = BSS2  # full-size: 256 rows x 512 cols
     ecfg = RSTDPConfig(n_inputs=cfg.n_rows // 2, n_neurons=cfg.n_cols,
                        pattern_size=24, trial_steps=128)
-    init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg, prefix=(n_inst,))
+    # the lowered cell is the FUSED hot path: whole-trial synray matmul +
+    # hoisted correlation window, i.e. what production would run on TPU
+    init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg, prefix=(n_inst,),
+                                        backend="fused")
 
     def batched_trial(state, stim):
         return trial(state, stim)
@@ -289,6 +361,8 @@ def lower_bss2_cell(shape, ctx, mesh_cfg):
 
     txt = compiled.as_text()
     ca = compiled.cost_analysis()
+    if isinstance(ca, list):     # older jax returns [dict] per computation
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     colls = parse_collectives(txt)
     hbm = hbm_bytes_estimate(txt)

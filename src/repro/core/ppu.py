@@ -57,11 +57,66 @@ class VectorUnit:
         w = state.syn.weights.astype(jnp.float32)
         w_new, rule_state = rule(w, obs, rule_state, **kw)
         syn = self.write_weights(state.syn, w_new)
-        new_state = state._replace(
-            syn=syn,
+        return (self._reset_observables(state._replace(syn=syn)),
+                rule_state, obs)
+
+    def _reset_observables(self, state):
+        """Post-read reset: rate counters and correlation capacitors."""
+        return state._replace(
             rate_counters=jnp.zeros_like(state.rate_counters),
             corr=state.corr._replace(
                 a_causal=jnp.zeros_like(state.corr.a_causal),
                 a_acausal=jnp.zeros_like(state.corr.a_acausal)),
         )
-        return new_state, rule_state, obs
+
+    # -- fused rule application --------------------------------------------
+    def apply_rstdp(self, state, rule_state: Dict, *, reward,
+                    eta: float = 0.5, gamma: float = 0.3, noise: float = 0.3,
+                    impl: str = "auto"):
+        """Standard R-STDP (``rules.rstdp`` semantics) with the whole
+        read -> eligibility -> update -> write-back inner loop routed
+        through the fused ``repro.kernels.ppu_update`` Pallas kernel: CADC
+        digitization, eligibility, dw and the saturating 6-bit store happen
+        per VMEM tile, exactly like the silicon PPU's row-parallel vector
+        loop. ``impl="auto"`` picks the kernel on TPU and the jnp path
+        elsewhere (same selection rule as ``kernels/*/ops.py``).
+
+        Scope: this is the kernel route for the STANDARD rule only. The §5
+        experiment's Dale-signed rule (repro.core.hybrid) rewrites both
+        signed rows from a PPU-resident float state, which the
+        fixed-function kernel cannot express — it stays on the generic
+        ``apply_rule`` VM path.
+
+        Returns (new_state, new_rule_state, elig) — observables are reset
+        like ``apply_rule``.
+        """
+        mean_r = rule_state["mean_reward"]
+        mean_r_new = mean_r + gamma * (reward - mean_r)          # Eq. 2
+        mod = reward - mean_r
+        key, sub = jax.random.split(rule_state["key"])
+        xi = noise * jax.random.normal(sub, state.syn.weights.shape)
+        cadc_max = 2 ** self.cfg.cadc_bits - 1
+        if impl == "auto":
+            impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+        if impl == "ref":
+            qc, qa = self.read_correlation(state.corr)
+            elig = (qc - qa).astype(jnp.float32) / float(cadc_max)
+            w_new = (state.syn.weights.astype(jnp.float32)
+                     + eta * mod[..., None, :] * elig + xi)      # Eq. 3
+            w_q = synapse.quantize_weight(w_new)
+        else:
+            from repro.kernels.ppu_update import ops as ppu_ops
+
+            def fn(w, ac, aa, off, g, m, x):
+                return ppu_ops.rstdp_update(w, ac, aa, off, g, m, x,
+                                            eta=eta, cadc_max=cadc_max,
+                                            impl=impl)
+
+            for _ in range(state.syn.weights.ndim - 2):
+                fn = jax.vmap(fn)
+            w_q, elig = fn(state.syn.weights, state.corr.a_causal,
+                           state.corr.a_acausal, self.inst["cadc_offset"],
+                           self.inst["cadc_gain"], mod, xi)
+        new_state = self._reset_observables(
+            state._replace(syn=state.syn._replace(weights=w_q)))
+        return new_state, dict(mean_reward=mean_r_new, key=key), elig

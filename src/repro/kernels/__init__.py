@@ -11,4 +11,23 @@ Three kernels, each with a pure-jnp oracle (ref.py) and a jit'd wrapper
   ppu_update  the PPU vector-unit inner loop: CADC digitization ->
               eligibility -> R-STDP -> saturating 6-bit weight write-back,
               row-parallel
+
+Implementation selection
+------------------------
+Every ops.py wrapper takes ``impl``:
+
+  auto        pallas when ``jax.default_backend() == "tpu"``, else ref
+  pallas      the native Pallas kernel (TPU)
+  interpret   the Pallas kernel under the interpreter (CPU validation)
+  ref         the module-level-jitted jnp oracle
+
+The emulation hot path consumes these through ``AnnCore`` (see
+repro.core.anncore): ``AnnCore(cfg, inst, backend="fused")`` hoists the
+correlation-sensor update out of the per-dt scan (one ``corr`` call per
+trial), batches the whole trial's synaptic currents through ``synray``
+(time as the batch axis), and ``VectorUnit.apply_rstdp`` routes the
+standard R-STDP write-back through ``ppu_update`` (the §5 Dale-signed
+rule stays on the generic VM path). ``backend="oracle"`` keeps
+the literal per-step semantics as ground truth; ``backend="auto"`` selects
+the fused path, mirroring the impl auto-selection above.
 """

@@ -6,14 +6,17 @@ import jax
 from repro.kernels.corr.kernel import correlation_window_pallas
 from repro.kernels.corr.ref import correlation_window_ref
 
+# jitted once at import — see synray/ops.py; lam/sat are static so each
+# (lam, sat) pair compiles exactly once
+_ref_jit = jax.jit(correlation_window_ref, static_argnames=("lam", "sat"))
+
 
 def correlation_window(pre, post, tp0, tq0, ac0, aa0, *, lam, sat=1023.0,
                        impl: str = "auto", **block_kw):
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
-        return correlation_window_ref(pre, post, tp0, tq0, ac0, aa0,
-                                      lam=lam, sat=sat)
+        return _ref_jit(pre, post, tp0, tq0, ac0, aa0, lam=lam, sat=sat)
     return correlation_window_pallas(pre, post, tp0, tq0, ac0, aa0, lam=lam,
                                      sat=sat, interpret=(impl == "interpret"),
                                      **block_kw)

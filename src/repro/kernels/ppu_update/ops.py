@@ -1,10 +1,17 @@
 """Jit'd public wrapper for the PPU R-STDP update kernel."""
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from repro.kernels.ppu_update.kernel import rstdp_update_pallas
 from repro.kernels.ppu_update.ref import rstdp_update_ref
+
+# jitted once at import (static kwargs hash into the cache key) —
+# constructing jax.jit(lambda ...) per call would defeat the jit cache
+_ref_jit = jax.jit(rstdp_update_ref,
+                   static_argnames=("eta", "cadc_scale", "wmax", "cadc_max"))
 
 
 def rstdp_update(weights, a_causal, a_acausal, cadc_offset, cadc_gain, mod,
@@ -12,9 +19,8 @@ def rstdp_update(weights, a_causal, a_acausal, cadc_offset, cadc_gain, mod,
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
-        return jax.jit(
-            lambda *a: rstdp_update_ref(*a, eta=eta, **kw)
-        )(weights, a_causal, a_acausal, cadc_offset, cadc_gain, mod, xi)
+        return _ref_jit(weights, a_causal, a_acausal, cadc_offset,
+                        cadc_gain, mod, xi, eta=eta, **kw)
     return rstdp_update_pallas(weights, a_causal, a_acausal, cadc_offset,
                                cadc_gain, mod, xi, eta=eta,
                                interpret=(impl == "interpret"), **kw)

@@ -1,16 +1,18 @@
 """Pure-jnp oracle for the ppu_update kernel (mirrors core.cadc + rules)."""
 import jax.numpy as jnp
 
-from repro.core import cadc
-
 
 def rstdp_update_ref(weights, a_causal, a_acausal, cadc_offset, cadc_gain,
                      mod, xi, *, eta: float, cadc_scale: float = 8.0,
                      wmax: int = 63, cadc_max: int = 255):
-    qc = cadc.digitize(a_causal, offset=cadc_offset[None],
-                       gain=cadc_gain[None], bits=8, in_scale=cadc_scale)
-    qa = cadc.digitize(a_acausal, offset=cadc_offset[None],
-                       gain=cadc_gain[None], bits=8, in_scale=cadc_scale)
+    # digitization clamps to cadc_max like the kernel (NOT a hardcoded
+    # 8-bit range), so both impls agree for any cadc bit width
+    def digitize(a):
+        code = a * (cadc_gain[None] * cadc_scale) + cadc_offset[None]
+        return jnp.clip(jnp.round(code), 0.0, float(cadc_max))
+
+    qc = digitize(a_causal)
+    qa = digitize(a_acausal)
     elig = (qc - qa).astype(jnp.float32) / float(cadc_max)
     w_new = weights.astype(jnp.float32) + eta * mod[None] * elig + xi
     w_q = jnp.clip(jnp.round(w_new), 0, wmax).astype(jnp.int8)

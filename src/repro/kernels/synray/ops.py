@@ -10,6 +10,10 @@ import jax
 from repro.kernels.synray.kernel import synaptic_current_pallas
 from repro.kernels.synray.ref import synaptic_current_ref
 
+# jitted once at import — constructing jax.jit(ref) per call would defeat
+# the jit cache and retrace on every invocation
+_ref_jit = jax.jit(synaptic_current_ref)
+
 
 def synaptic_current(events, event_addr, weights, addresses,
                      impl: str = "auto", **block_kw):
@@ -17,8 +21,7 @@ def synaptic_current(events, event_addr, weights, addresses,
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
-        return jax.jit(synaptic_current_ref)(events, event_addr, weights,
-                                             addresses)
+        return _ref_jit(events, event_addr, weights, addresses)
     return synaptic_current_pallas(events, event_addr, weights, addresses,
                                    interpret=(impl == "interpret"),
                                    **block_kw)

@@ -1,0 +1,178 @@
+"""Fused-backend equivalence: the hot path must reproduce the oracle.
+
+The fused AnnCore backend hoists correlation out of the dt scan, batches
+the whole window's synaptic currents through one event x weight matmul and
+pre-splits the Dale rows — all pure restructurings of the same arithmetic,
+so results must match the per-step oracle to float-reduction-order
+tolerance (empirically bit-exact on CPU at these sizes, asserted to 1e-4
+here to stay robust on other backends).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.bss2 import BSS2
+from repro.core import rules
+from repro.core.anncore import AnnCore
+from repro.core.ppu import VectorUnit
+from repro.verif.mismatch import sample_instance
+
+CFG = dataclasses.replace(BSS2.reduced(), n_rows=16, n_cols=16)
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _events(T, prefix, key=0, p=0.1, n_addr=4):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    ev = (jax.random.uniform(k1, (T, *prefix, CFG.n_rows)) < p
+          ).astype(jnp.float32)
+    ad = jax.random.randint(k2, (T, *prefix, CFG.n_rows), 0, n_addr,
+                            jnp.int8)
+    return ev, ad
+
+
+def _cores(prefix, **kw):
+    inst = sample_instance(CFG, jax.random.PRNGKey(0), prefix)
+    oracle = AnnCore(CFG, inst, backend="oracle")
+    fused = AnnCore(CFG, inst, backend="fused", **kw)
+    st = oracle.init_state(prefix)
+    kw_, ka = jax.random.split(jax.random.PRNGKey(9))
+    st = st._replace(syn=st.syn._replace(
+        weights=jax.random.randint(kw_, (*prefix, CFG.n_rows, CFG.n_cols),
+                                   20, 64, jnp.int8),
+        addresses=jax.random.randint(ka, (*prefix, CFG.n_rows, CFG.n_cols),
+                                     0, 4, jnp.int8)))
+    return oracle, fused, st
+
+
+def _assert_state_close(s1, s2):
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **TOL)
+
+
+class TestFusedRunEquivalence:
+    @pytest.mark.parametrize("record_v", [False, True])
+    def test_matches_oracle(self, record_v):
+        oracle, fused, st = _cores(())
+        ev, ad = _events(200, ())
+        s1, o1 = jax.jit(lambda s, e, a: oracle.run(s, e, a, record_v))(
+            st, ev, ad)
+        s2, o2 = jax.jit(lambda s, e, a: fused.run(s, e, a, record_v))(
+            st, ev, ad)
+        assert float(o1["spikes"].sum()) > 0, "drive must elicit spikes"
+        np.testing.assert_allclose(np.asarray(o1["spikes"]),
+                                   np.asarray(o2["spikes"]), **TOL)
+        if record_v:
+            np.testing.assert_allclose(np.asarray(o1["v"]),
+                                       np.asarray(o2["v"]), **TOL)
+        _assert_state_close(s1, s2)
+
+    def test_matches_oracle_batched_instances(self):
+        prefix = (3,)
+        oracle, fused, st = _cores(prefix)
+        ev, ad = _events(150, prefix, key=1)
+        s1, o1 = jax.jit(oracle.run)(st, ev, ad)
+        s2, o2 = jax.jit(fused.run)(st, ev, ad)
+        np.testing.assert_allclose(np.asarray(o1["spikes"]),
+                                   np.asarray(o2["spikes"]), **TOL)
+        _assert_state_close(s1, s2)
+
+    def test_const_addr_fast_path(self):
+        """Per-row-constant event addresses: the fused path may resolve the
+        match mask once per window."""
+        oracle, fused, st = _cores((), const_addr=True)
+        ev, _ = _events(150, (), key=2)
+        ad = jnp.broadcast_to(
+            jax.random.randint(jax.random.PRNGKey(3), (CFG.n_rows,), 0, 4,
+                               jnp.int8), ev.shape)
+        s1, o1 = jax.jit(oracle.run)(st, ev, ad)
+        s2, o2 = jax.jit(fused.run)(st, ev, ad)
+        np.testing.assert_allclose(np.asarray(o1["spikes"]),
+                                   np.asarray(o2["spikes"]), **TOL)
+        _assert_state_close(s1, s2)
+
+    def test_interpret_kernels_match_oracle(self):
+        """Integration through the actual Pallas kernels (interpret mode):
+        synray + corr wired into the fused run."""
+        oracle, fused, st = _cores((), kernel_impl="interpret")
+        ev, ad = _events(64, (), key=4)
+        s1, o1 = oracle.run(st, ev, ad)
+        s2, o2 = fused.run(st, ev, ad)
+        np.testing.assert_allclose(np.asarray(o1["spikes"]),
+                                   np.asarray(o2["spikes"]), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(s1.corr.a_causal),
+                                   np.asarray(s2.corr.a_causal),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestApplyRstdpKernelRouting:
+    @pytest.mark.parametrize("impl", ["ref", "interpret"])
+    @pytest.mark.parametrize("prefix", [(), (2,)])
+    def test_matches_generic_apply_rule(self, impl, prefix):
+        inst = sample_instance(CFG, jax.random.PRNGKey(0), prefix)
+        core = AnnCore(CFG, inst)
+        ppu = VectorUnit(CFG, inst)
+        st = core.init_state(prefix)
+        shape = (*prefix, CFG.n_rows, CFG.n_cols)
+        ks = jax.random.split(jax.random.PRNGKey(5), 4)
+        st = st._replace(
+            syn=st.syn._replace(weights=jax.random.randint(
+                ks[0], shape, 0, 64, jnp.int8)),
+            corr=st.corr._replace(
+                a_causal=jax.random.uniform(ks[1], shape) * 20,
+                a_acausal=jax.random.uniform(ks[2], shape) * 20),
+            rate_counters=jnp.ones((*prefix, CFG.n_cols)))
+        reward = jax.random.bernoulli(ks[3], 0.5, (*prefix, CFG.n_cols)
+                                      ).astype(jnp.float32)
+        rs = dict(mean_reward=jnp.zeros((*prefix, CFG.n_cols)),
+                  key=jax.random.PRNGKey(8))
+        sg, rg, obs = ppu.apply_rule(rules.rstdp, st, dict(rs),
+                                     reward=reward, eta=4.0, noise=0.2)
+        sf, rf, elig = ppu.apply_rstdp(st, dict(rs), reward=reward,
+                                       eta=4.0, noise=0.2, impl=impl)
+        # int8 stores may differ by 1 LSB at exact .5 rounding ties only
+        dw = np.abs(np.asarray(sg.syn.weights, np.int32)
+                    - np.asarray(sf.syn.weights, np.int32))
+        assert dw.max() <= 1 and (dw > 0).mean() < 0.01
+        np.testing.assert_allclose(np.asarray(rg["mean_reward"]),
+                                   np.asarray(rf["mean_reward"]), **TOL)
+        assert (np.asarray(rg["key"]) == np.asarray(rf["key"])).all()
+        # observables reset exactly like apply_rule
+        assert float(sf.rate_counters.sum()) == 0.0
+        assert float(sf.corr.a_causal.sum()) == 0.0
+        ref_elig = (np.asarray(obs["causal"])
+                    - np.asarray(obs["acausal"])) / 255.0
+        np.testing.assert_allclose(ref_elig, np.asarray(elig), atol=1e-2)
+
+
+class TestScannedTraining:
+    def test_scan_matches_python_loop(self):
+        """One-program lax.scan over trials == per-trial jit dispatch
+        (same seeds -> same weights/rewards)."""
+        from repro.core.hybrid import RSTDPConfig, run_training
+        ecfg = RSTDPConfig(trial_steps=96)
+        o1, s1, _ = run_training(n_trials=9, seed=3, ecfg=ecfg, scan=True)
+        o2, s2, _ = run_training(n_trials=9, seed=3, ecfg=ecfg, scan=False)
+        np.testing.assert_allclose(o1["w_signed_final"],
+                                   o2["w_signed_final"], **TOL)
+        np.testing.assert_allclose(o1["mean_reward"], o2["mean_reward"],
+                                   **TOL)
+        np.testing.assert_allclose(o1["reward"], o2["reward"], **TOL)
+        np.testing.assert_array_equal(o1["stim"], o2["stim"])
+        assert o1["mean_reward"].shape == (9, ecfg.n_neurons)
+
+    def test_scan_matches_oracle_backend(self):
+        """The full experiment on the fused backend == oracle backend."""
+        from repro.core.hybrid import RSTDPConfig, run_training
+        ecfg = RSTDPConfig(trial_steps=96)
+        o1, _, _ = run_training(n_trials=6, seed=4, ecfg=ecfg)
+        o2, _, _ = run_training(n_trials=6, seed=4, ecfg=ecfg,
+                                backend="oracle", scan=False)
+        np.testing.assert_allclose(o1["w_signed_final"],
+                                   o2["w_signed_final"], rtol=1e-3,
+                                   atol=1e-3)
+        np.testing.assert_allclose(o1["mean_reward"], o2["mean_reward"],
+                                   **TOL)

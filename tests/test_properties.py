@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 import dataclasses
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 import jax
