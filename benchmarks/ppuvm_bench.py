@@ -1,0 +1,106 @@
+"""PPU-VM interpreter overhead vs the fixed-function R-STDP path.
+
+Two levels:
+
+  * rule-only: `VectorUnit.run_program` (ISA R-STDP, interpreted
+    instruction-by-instruction) vs `ppu_update.rstdp_update_ref` (one
+    fused jnp expression) on full-size [256, 512] synapse arrays — the
+    raw cost of programmability;
+  * in-scan: the §5 experiment's scanned training with
+    ``rule_impl="vm"`` vs ``"python"`` — what the overhead amounts to
+    once the emulation window dominates the trial.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(f, *args, iters=20):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    import dataclasses
+
+    from repro.configs.bss2 import BSS2
+    from repro.core.anncore import AnnCore
+    from repro.core.ppu import VectorUnit
+    from repro.ppuvm import programs
+    from repro.verif.mismatch import sample_instance
+
+    # -- rule-only: full-size array, program interpreter vs fused update --
+    cfg = BSS2  # 256 x 512
+    inst = sample_instance(cfg, jax.random.PRNGKey(0))
+    ppu = VectorUnit(cfg, inst)
+    core = AnnCore(cfg, inst)
+    st = core.init_state()
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    st = st._replace(
+        syn=st.syn._replace(weights=jax.random.randint(
+            ks[0], (cfg.n_rows, cfg.n_cols), 0, 64, jnp.int8)),
+        corr=st.corr._replace(
+            a_causal=jax.random.uniform(ks[1], (cfg.n_rows, cfg.n_cols),
+                                        maxval=8.0),
+            a_acausal=jax.random.uniform(ks[2], (cfg.n_rows, cfg.n_cols),
+                                         maxval=8.0)))
+    reward = (jax.random.uniform(ks[3], (cfg.n_cols,)) < 0.5
+              ).astype(jnp.float32)
+    rs = dict(mean_reward=jnp.zeros(cfg.n_cols), key=jax.random.PRNGKey(2))
+    prog = jnp.asarray(programs.rstdp_program(eta=0.5))
+
+    f_fixed = jax.jit(lambda s, r: ppu.apply_rstdp(
+        s, dict(rs), reward=r, eta=0.5, impl="ref"))
+    f_vm = jax.jit(lambda s, r: ppu.apply_rstdp_program(
+        s, dict(rs), reward=r, program=prog))
+    t_fixed = _time(f_fixed, st, reward)
+    t_vm = _time(f_vm, st, reward)
+
+    # -- in-scan: whole §5 experiment, python rule vs VM program rule -----
+    from repro.core.hybrid import RSTDPConfig, make_experiment, \
+        make_scanned_training
+
+    n_trials = 50
+    ecfg = RSTDPConfig()
+    t_scan = {}
+    for impl in ("python", "vm"):
+        init, trial, meta = make_experiment(
+            ecfg=ecfg, instance_key=jax.random.PRNGKey(0), rule_impl=impl)
+        scanned = make_scanned_training(meta["scanned_training"])
+        stims = jnp.asarray(np.resize([1, 2, 0], n_trials), jnp.int32)
+
+        def once(scanned=scanned, init=init, stims=stims):
+            state, hist = scanned(init(jax.random.PRNGKey(1)), stims)
+            return hist["mean_reward"]
+
+        t_scan[impl] = _time(once, iters=5) / n_trials
+
+    res = dict(
+        name="ppuvm",
+        rule_fixed_us=t_fixed * 1e6, rule_vm_us=t_vm * 1e6,
+        rule_overhead_x=t_vm / t_fixed,
+        trial_python_us=t_scan["python"] * 1e6,
+        trial_vm_us=t_scan["vm"] * 1e6,
+        trial_overhead_x=t_scan["vm"] / t_scan["python"],
+        n_instructions=int(prog.shape[0]),
+    )
+    print(f"rule-only [256x512]: fixed {res['rule_fixed_us']:.0f}us  "
+          f"VM {res['rule_vm_us']:.0f}us  "
+          f"overhead {res['rule_overhead_x']:.2f}x "
+          f"({res['n_instructions']} instructions)")
+    print(f"in-scan trial [{ecfg.n_inputs}->{ecfg.n_neurons}]: "
+          f"python {res['trial_python_us']:.0f}us  "
+          f"VM {res['trial_vm_us']:.0f}us  "
+          f"overhead {res['trial_overhead_x']:.2f}x")
+    return res
+
+
+if __name__ == "__main__":
+    run()

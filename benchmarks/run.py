@@ -5,6 +5,7 @@
   fig11_rstdp          paper Fig. 11 (R-STDP reward -> ~1 @ 40% overlap)
   step_time            paper §5     (290us claim: scan vs dispatch vs host)
   kernels              Pallas hot-spot microbenchmarks
+  ppuvm                PPU-VM interpreter overhead vs fixed-function rule
   roofline             §Roofline table from the dry-run artifacts
 
 Usage:
@@ -38,13 +39,14 @@ def _jsonable(x):
 def main() -> None:
     from benchmarks import (fig4_calibration, fig8_event_interface,
                             fig11_rstdp, step_time, kernels_bench,
-                            roofline_table)
+                            ppuvm_bench, roofline_table)
     suites = [
         ("fig4_calibration", fig4_calibration.run),
         ("fig8_event_interface", fig8_event_interface.run),
         ("fig11_rstdp", fig11_rstdp.run),
         ("step_time", step_time.run),
         ("kernels", kernels_bench.run),
+        ("ppuvm", ppuvm_bench.run),
         ("roofline", roofline_table.run),
     ]
     ap = argparse.ArgumentParser()

@@ -75,7 +75,7 @@ def _patterns(ecfg: RSTDPConfig) -> Tuple[np.ndarray, np.ndarray]:
 
 def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                     instance_key=None, prefix=(), backend: str = "auto",
-                    kernel_impl: str = "auto"):
+                    kernel_impl: str = "auto", rule_impl: str = "python"):
     """Build the experiment closure set. Returns (init_fn, trial_fn, meta).
 
     The machine uses 2 rows per input (exc/inh pair, Dale's law: the PPU
@@ -85,6 +85,17 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     repro.core.anncore): "auto" runs the fused hot path — correlation
     hoisted out of the dt scan, whole-trial synray matmul — with "oracle"
     kept as the per-step ground truth.
+
+    ``rule_impl`` selects how the §5 learning rule executes:
+      "python"  the rule is the ``_signed_rule`` Python callable (default);
+      "vm"      the vector part runs as a PPU-VM *program*
+                (``repro.ppuvm.programs.signed_dw_program``) interpreted by
+                the fixed-point SIMD executor inside the same jitted trial —
+                the paper's hybrid-plasticity story with the rule as
+                uploadable software instead of host code. The scalar glue
+                (Eq. 2, xi random walk, Dale row rewrite) is identical, so
+                the two paths differ only by Q8.8 fixed-point rounding of
+                the dw term.
     """
     if cfg is None:
         cfg = dataclasses.replace(
@@ -156,6 +167,32 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                                         jnp.zeros_like(even)))
         return jnp.where(own_shown > 0, fired, 1.0 - fired)
 
+    if rule_impl == "vm":
+        from repro.ppuvm import isa as _visa, programs as _vprog
+        _dw_words = jnp.asarray(_vprog.signed_dw_program(
+            eta=ecfg.eta, eta_homeo=ecfg.eta_homeo,
+            fire_thresh=ecfg.fire_thresh))
+    elif rule_impl != "python":
+        raise ValueError(f"unknown rule_impl {rule_impl!r}")
+
+    def _vm_signed_update(cs, state, reward, k_rule):
+        """§5 rule with the vector part as a PPU-VM program: the program
+        computes the per-row dw readout (register 0); the scalar core
+        applies it to the PPU-resident signed float weights, adds the xi
+        walk, and rewrites both Dale rows — mirroring ``_signed_rule``."""
+        qc, qa = ppu.read_correlation(cs.corr)
+        mod = jnp.stack([reward - state.mean_reward, reward], axis=0)
+        cs2, regs = ppu.run_program(cs, _dw_words, mod=mod)
+        dw = regs[0][..., 0::2, :].astype(jnp.float32) / _visa.ONE
+        key, sub = jax.random.split(k_rule)
+        xi = ecfg.noise * jax.random.normal(sub, state.w_signed.shape)
+        w_signed = jnp.clip(state.w_signed + dw + xi, -45.0, 45.0)
+        mean_r = state.mean_reward + ecfg.gamma * (
+            reward - state.mean_reward)                         # Eq. 2
+        cs2 = cs2._replace(syn=_write_signed(cs2.syn, w_signed))
+        obs = dict(causal=qc, acausal=qa)
+        return cs2, dict(mean_reward=mean_r, w_signed=w_signed), obs
+
     def _trial_with(state, stim, ev, addr, k_rule, key_next):
         """Trial body given pregenerated events + keys (shared between the
         per-trial dispatch path and the whole-experiment scan)."""
@@ -164,11 +201,14 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
         r = _reward(rates, stim)
 
         # PPU: R-STDP on the signed PPU weights, using exc-row eligibility
-        cs2, rule_state, obs = ppu.apply_rule(
-            _signed_rule, cs,
-            dict(mean_reward=state.mean_reward, key=k_rule,
-                 w_signed=state.w_signed),
-            reward=r)
+        if rule_impl == "vm":
+            cs2, rule_state, obs = _vm_signed_update(cs, state, r, k_rule)
+        else:
+            cs2, rule_state, obs = ppu.apply_rule(
+                _signed_rule, cs,
+                dict(mean_reward=state.mean_reward, key=k_rule,
+                     w_signed=state.w_signed),
+                reward=r)
         new = ExperimentState(core=cs2, w_signed=rule_state["w_signed"],
                               mean_reward=rule_state["mean_reward"],
                               key=key_next)
@@ -259,7 +299,8 @@ def make_scanned_training(scanned_training):
 
 def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                  seed: int = 0, cfg: BSS2Config = None, fused: bool = True,
-                 scan: bool = None, backend: str = "auto"):
+                 scan: bool = None, backend: str = "auto",
+                 rule_impl: str = "python"):
     """Full §5 experiment. Returns the metrics history (stacked).
 
     Modes:
@@ -271,7 +312,7 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
     """
     init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg,
                                         instance_key=jax.random.PRNGKey(seed),
-                                        backend=backend)
+                                        backend=backend, rule_impl=rule_impl)
     state = init(jax.random.PRNGKey(seed + 1))
     stims = jnp.asarray(np.resize([1, 2, 0], n_trials), jnp.int32)
     if scan is None:

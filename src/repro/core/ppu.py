@@ -23,6 +23,16 @@ from repro.core import cadc, synapse
 from repro.configs.bss2 import BSS2Config
 
 
+def _to_fixed_j(x):
+    """Float -> Q8.8 int32 (traced twin of ``repro.ppuvm.isa.to_fixed``;
+    jnp.round and np.round share round-half-even, so host- and
+    device-digitized modulators agree bit-exactly)."""
+    from repro.ppuvm import isa
+
+    return jnp.clip(jnp.round(jnp.asarray(x, jnp.float32) * isa.ONE),
+                    isa.I16MIN, isa.I16MAX).astype(jnp.int32)
+
+
 class VectorUnit:
     def __init__(self, cfg: BSS2Config, inst: Dict):
         self.cfg = cfg
@@ -68,6 +78,54 @@ class VectorUnit:
                 a_causal=jnp.zeros_like(state.corr.a_causal),
                 a_acausal=jnp.zeros_like(state.corr.a_acausal)),
         )
+
+    # -- programmable rule execution (PPU-VM) -------------------------------
+    def run_program(self, state, words, *, mod=None, noise=None):
+        """Execute a PPU-VM program (``repro.ppuvm``) against the machine
+        state: the program sees the digitized CADC causal/anti-causal
+        codes, the rate counters, optional per-column modulator slots
+        (``mod`` [n_mod, ..., C] float) and a per-synapse noise plane
+        (``noise`` [..., R, C] float), and may store new 6-bit weights.
+        Pure and jit-able — runs inside the fused training scan.
+
+        Returns (new_state, regs): observables are reset like
+        ``apply_rule``; ``regs`` is the final [N_REGS, ..., R, C] register
+        file (fixed point), the program's scratch readout.
+        """
+        mod_fp = None if mod is None else _to_fixed_j(mod)
+        noise_fp = None if noise is None else _to_fixed_j(noise)
+        return self.run_program_fixed(state, words, mod_fp=mod_fp,
+                                      noise_fp=noise_fp)
+
+    def run_program_fixed(self, state, words, *, mod_fp=None, noise_fp=None):
+        """Like ``run_program`` but with pre-digitized Q8.8 int32 modulator
+        slots / noise plane — the form the playback ``PPU_RUN`` instruction
+        carries, so both co-sim backends consume identical integers."""
+        from repro.ppuvm import interp
+
+        qc, qa = self.read_correlation(state.corr)
+        w_new, regs = interp.run_program_jax(
+            jnp.asarray(words), state.syn.weights.astype(jnp.int32), qc, qa,
+            state.rate_counters, mod_fp, noise_fp)
+        syn = state.syn._replace(weights=w_new.astype(jnp.int8))
+        return self._reset_observables(state._replace(syn=syn)), regs
+
+    def apply_rstdp_program(self, state, rule_state: Dict, *, reward,
+                            program, gamma: float = 0.3,
+                            noise: float = 0.3):
+        """R-STDP with the Eq.-3 vector part executed as a PPU-VM
+        *program* (``repro.ppuvm.programs.rstdp_program``): the scalar
+        prologue (Eq. 2 running mean, PRNG advance) matches
+        ``apply_rstdp`` exactly, so the two paths are interchangeable in
+        the training scan — the co-development property of §3.1 applied
+        to the learning rule itself."""
+        mean_r = rule_state["mean_reward"]
+        mean_r_new = mean_r + gamma * (reward - mean_r)          # Eq. 2
+        mod = (reward - mean_r)[None]                            # slot 0
+        key, sub = jax.random.split(rule_state["key"])
+        xi = noise * jax.random.normal(sub, state.syn.weights.shape)
+        new_state, regs = self.run_program(state, program, mod=mod, noise=xi)
+        return new_state, dict(mean_reward=mean_r_new, key=key), regs
 
     # -- fused rule application --------------------------------------------
     def apply_rstdp(self, state, rule_state: Dict, *, reward,

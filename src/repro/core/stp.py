@@ -24,7 +24,14 @@ def init_state(shape) -> STPState:
 
 
 CALIB_BITS = 4
-CALIB_STEP = 0.04     # efficacy units per calibration LSB
+# Efficacy units per calibration LSB. Sized so the 4-bit trim range
+# (±2^3 LSB = ±0.8) covers ~3.2 sigma of the offset distribution
+# (sigma_stp_offset = 0.25): that is the very point of the paper's §3.2.2
+# pre-tapeout MC verification — pick circuit parameters such that
+# calibration can collapse the observed mismatch. (At the previous 0.04 the
+# range was ±0.32 ≈ 1.3 sigma and ~20% of drivers were untrimmable; the
+# binary search was fine, the DAC range was the bug.)
+CALIB_STEP = 0.1
 
 
 def efficacy(state: STPState, spikes, *, u: float, offset, calib_code):

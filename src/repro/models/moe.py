@@ -114,6 +114,9 @@ def moe_ffn(x, p, arch: ArchConfig, ctx: ShardingCtx, *, positions=None):
 # Optimized expert parallelism (shard_map) — the §Perf hillclimb result
 # ---------------------------------------------------------------------------
 
+_check_kw = None   # shard_map replication-check kwarg, probed on first use
+
+
 def moe_ffn_ep(x, p, arch: ArchConfig, ctx: ShardingCtx, *, positions=None):
     """Expert-parallel MoE with *explicit* per-rank dispatch.
 
@@ -139,6 +142,14 @@ def moe_ffn_ep(x, p, arch: ArchConfig, ctx: ShardingCtx, *, positions=None):
         from jax import shard_map
     except ImportError:  # older jax
         from jax.experimental.shard_map import shard_map
+    global _check_kw
+    if _check_kw is None:
+        # the replication-check kwarg was renamed check_rep -> check_vma
+        # across jax versions; probe once per process
+        import inspect
+        _check_kw = ({"check_vma": False} if "check_vma"
+                     in inspect.signature(shard_map).parameters
+                     else {"check_rep": False})
 
     if ctx.mesh is None:
         return moe_ffn(x, p, arch, ctx, positions=positions)
@@ -216,7 +227,7 @@ def moe_ffn_ep(x, p, arch: ArchConfig, ctx: ShardingCtx, *, positions=None):
         block, mesh=ctx.mesh,
         in_specs=(xspec, P(None, None), wspec, wspec, wspec),
         out_specs=(xspec, P()),
-        check_vma=False,
+        **_check_kw,
     )(x, p["router"], p["we_gate"], p["we_up"], p["we_down"])
 
     if m.n_shared_experts:

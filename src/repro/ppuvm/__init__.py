@@ -1,0 +1,10 @@
+"""PPU-VM: a SIMD fixed-point instruction-set emulator for the plasticity
+processing unit — learning rules become uploadable programs (paper §2.2,
+§3.1, §5).
+
+  isa       numeric model, opcode table, encoding
+  asm       assembler / program builder -> dense int32 words
+  interp    jit-able JAX executor + independent NumPy executor
+  programs  R-STDP / STDP / homeostasis written in the ISA
+"""
+from repro.ppuvm import asm, interp, isa, programs  # noqa: F401

@@ -1,0 +1,206 @@
+"""Two interchangeable executors for the PPU-VM ISA (paper §3.1).
+
+``run_program_jax``
+    The production executor: a ``lax.scan`` over the instruction words with
+    a ``lax.switch`` over opcodes — one jit-able pure function, so a VM
+    program can run *inside* the fused training scan (the hybrid-plasticity
+    property: rule execution never leaves the device program).
+
+``run_program_np``
+    An independent straight-loop NumPy interpreter with the same integer
+    semantics, used by the RefBackend of the playback co-simulation. Both
+    executors are integer-exact: given identical inputs they must produce
+    bit-identical registers and weights — that equality is the
+    transparent-interchange check, now for *programs* instead of traces.
+
+Inputs (see ``repro.ppuvm.isa`` for the numeric model):
+  words    [P]            int32 instruction stream
+  weights  [..., R, C]    integer synapse weights (0..63)
+  qc, qa   [..., R, C]    int CADC causal / anti-causal codes (0..255)
+  rates    [..., C]       per-column rate counters (integer-valued)
+  mod      [n_mod, ..., C] Q8.8 per-column modulator slots
+  noise    [..., R, C]    Q8.8 per-synapse noise plane
+
+Returns ``(weights_out, regs)`` with ``weights_out`` int32 ``[..., R, C]``
+and ``regs`` the final ``[N_REGS, ..., R, C]`` register file (programs use
+it as a scratch readout, like the PPU's scratch SRAM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ppuvm import isa
+
+assert isa.FRAC == 8, "CADC fractional loads assume Q8.8"
+
+
+# ---------------------------------------------------------------------------
+# JAX executor
+# ---------------------------------------------------------------------------
+
+def run_program_jax(words, weights, qc, qa, rates, mod=None, noise=None):
+    lane_shape = weights.shape
+    weights = weights.astype(jnp.int32)
+    qc = jnp.broadcast_to(qc, lane_shape).astype(jnp.int32)
+    qa = jnp.broadcast_to(qa, lane_shape).astype(jnp.int32)
+    rates_fx = _sat_j(jnp.round(rates).astype(jnp.int32) << isa.FRAC)
+    rates_fx = jnp.broadcast_to(rates_fx[..., None, :], lane_shape)
+    if mod is None:
+        mod = jnp.zeros((1, *lane_shape[:-2], lane_shape[-1]), jnp.int32)
+    mod = jnp.broadcast_to(mod[..., None, :],
+                           (mod.shape[0], *lane_shape)).astype(jnp.int32)
+    if noise is None:
+        noise = jnp.zeros(lane_shape, jnp.int32)
+    noise = jnp.broadcast_to(noise, lane_shape).astype(jnp.int32)
+
+    regs0 = jnp.zeros((isa.N_REGS, *lane_shape), jnp.int32)
+
+    def sel_branch(regs, wmem, a, b, rd, sh, simm):
+        mask = regs[rd] != 0
+        return regs.at[rd].set(jnp.where(mask, a, b)), wmem
+
+    def stw_branch(regs, wmem, a, b, rd, sh, simm):
+        return regs, jnp.clip((a + (isa.ONE >> 1)) >> isa.FRAC, 0, isa.WMAX)
+
+    def ldmod_branch(regs, wmem, a, b, rd, sh, simm):
+        slot = jnp.clip(simm & 0xFF, 0, mod.shape[0] - 1)
+        return regs.at[rd].set(mod[slot]), wmem
+
+    def _valb(fn):
+        def br(regs, wmem, a, b, rd, sh, simm):
+            return regs.at[rd].set(fn(a, b, sh, simm)), wmem
+        return br
+
+    branches = [None] * isa.N_OPS
+    branches[isa.NOP] = lambda regs, wmem, a, b, rd, sh, simm: (regs, wmem)
+    branches[isa.SPLAT] = _valb(
+        lambda a, b, sh, simm: jnp.broadcast_to(simm, lane_shape))
+    branches[isa.MOV] = _valb(lambda a, b, sh, simm: a)
+    branches[isa.ADD] = _valb(lambda a, b, sh, simm: _sat_j(a + b))
+    branches[isa.SUB] = _valb(lambda a, b, sh, simm: _sat_j(a - b))
+    # shift clamp 16: registers are Q8.8 halfwords, so larger shifts are
+    # meaningless — and 1 << sh must stay well inside int32
+    branches[isa.MULF] = _valb(
+        lambda a, b, sh, simm: _sat_j(
+            (a * b + ((1 << jnp.minimum(sh, 16)) >> 1))
+            >> jnp.minimum(sh, 16)))
+    branches[isa.SHL] = _valb(
+        lambda a, b, sh, simm: _sat_j(a << jnp.minimum(sh, 15)))
+    branches[isa.SHR] = _valb(lambda a, b, sh, simm: a >> jnp.minimum(sh, 31))
+    branches[isa.CMPGE] = _valb(
+        lambda a, b, sh, simm: jnp.where(a >= b, isa.ONE, 0))
+    branches[isa.SEL] = sel_branch
+    branches[isa.MAXS] = _valb(lambda a, b, sh, simm: jnp.maximum(a, b))
+    branches[isa.MINS] = _valb(lambda a, b, sh, simm: jnp.minimum(a, b))
+    branches[isa.LDW] = lambda regs, wmem, a, b, rd, sh, simm: (
+        regs.at[rd].set(wmem << isa.FRAC), wmem)
+    branches[isa.STW] = stw_branch
+    branches[isa.LDCAUSAL] = _valb(lambda a, b, sh, simm: qc)
+    branches[isa.LDACAUSAL] = _valb(lambda a, b, sh, simm: qa)
+    branches[isa.LDRATE] = _valb(lambda a, b, sh, simm: rates_fx)
+    branches[isa.LDMOD] = ldmod_branch
+    branches[isa.LDNOISE] = _valb(lambda a, b, sh, simm: noise)
+
+    def step(carry, word):
+        regs, wmem = carry
+        op = (word >> 26) & 0x3F
+        rd = (word >> 21) & 0x1F
+        ra = (word >> 16) & 0x1F
+        imm = word & 0xFFFF
+        simm = imm - ((imm & 0x8000) << 1)
+        rb = (imm >> 8) & 0x1F
+        sh = imm & 0xFF
+        a = regs[ra % isa.N_REGS]
+        b = regs[rb % isa.N_REGS]
+        # unknown opcodes execute as NOP — identical in both executors,
+        # so the bit-interchange contract holds for ANY word stream;
+        # playback's WRITE_PPU_PROGRAM additionally rejects them up front
+        regs, wmem = jax.lax.switch(
+            jnp.where(op < isa.N_OPS, op, isa.NOP), branches,
+            regs, wmem, a, b, rd % isa.N_REGS, sh, simm)
+        return (regs, wmem), None
+
+    (regs, wmem), _ = jax.lax.scan(step, (regs0, weights),
+                                   jnp.asarray(words, jnp.int32))
+    return wmem, regs
+
+
+def _sat_j(x):
+    return jnp.clip(x, isa.I16MIN, isa.I16MAX)
+
+
+# ---------------------------------------------------------------------------
+# NumPy executor (independent reference — keep free of jax)
+# ---------------------------------------------------------------------------
+
+def run_program_np(words, weights, qc, qa, rates, mod=None, noise=None):
+    lane_shape = np.shape(weights)
+    wmem = np.asarray(weights, np.int32).copy()
+    qc = np.broadcast_to(np.asarray(qc, np.int32), lane_shape)
+    qa = np.broadcast_to(np.asarray(qa, np.int32), lane_shape)
+    rates_fx = _sat_n(np.round(np.asarray(rates)).astype(np.int32)
+                      << isa.FRAC)
+    rates_fx = np.broadcast_to(rates_fx[..., None, :], lane_shape)
+    if mod is None:
+        mod = np.zeros((1, *lane_shape[:-2], lane_shape[-1]), np.int32)
+    mod = np.asarray(mod, np.int32)
+    if noise is None:
+        noise = np.zeros(lane_shape, np.int32)
+    noise = np.broadcast_to(np.asarray(noise, np.int32), lane_shape)
+
+    regs = np.zeros((isa.N_REGS, *lane_shape), np.int32)
+    for word in np.asarray(words, np.int64):
+        op, rd, ra, rb, sh, simm = isa.decode(int(word))
+        rd %= isa.N_REGS
+        a = regs[ra % isa.N_REGS]
+        b = regs[rb % isa.N_REGS]
+        if op == isa.NOP:
+            pass
+        elif op == isa.SPLAT:
+            regs[rd] = simm
+        elif op == isa.MOV:
+            regs[rd] = a
+        elif op == isa.ADD:
+            regs[rd] = _sat_n(a + b)
+        elif op == isa.SUB:
+            regs[rd] = _sat_n(a - b)
+        elif op == isa.MULF:
+            shc = min(sh, 16)
+            regs[rd] = _sat_n((a * b + ((1 << shc) >> 1)) >> shc)
+        elif op == isa.SHL:
+            regs[rd] = _sat_n(a << min(sh, 15))
+        elif op == isa.SHR:
+            regs[rd] = a >> min(sh, 31)
+        elif op == isa.CMPGE:
+            regs[rd] = np.where(a >= b, isa.ONE, 0)
+        elif op == isa.SEL:
+            regs[rd] = np.where(regs[rd] != 0, a, b)
+        elif op == isa.MAXS:
+            regs[rd] = np.maximum(a, b)
+        elif op == isa.MINS:
+            regs[rd] = np.minimum(a, b)
+        elif op == isa.LDW:
+            regs[rd] = wmem << isa.FRAC
+        elif op == isa.STW:
+            wmem = np.clip((a + (isa.ONE >> 1)) >> isa.FRAC,
+                           0, isa.WMAX).astype(np.int32)
+        elif op == isa.LDCAUSAL:
+            regs[rd] = qc
+        elif op == isa.LDACAUSAL:
+            regs[rd] = qa
+        elif op == isa.LDRATE:
+            regs[rd] = rates_fx
+        elif op == isa.LDMOD:
+            regs[rd] = np.broadcast_to(
+                mod[min(simm & 0xFF, mod.shape[0] - 1)][..., None, :],
+                lane_shape)
+        elif op == isa.LDNOISE:
+            regs[rd] = noise
+        # unknown opcodes are NOPs, matching the JAX executor
+    return wmem, regs
+
+
+def _sat_n(x):
+    return np.clip(x, isa.I16MIN, isa.I16MAX).astype(np.int32)

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs.bss2 import BSS2Config
 from repro.core.anncore import AnnCore
+from repro.core.ppu import VectorUnit
 from repro.verif.mismatch import ideal_instance
 
 
@@ -40,7 +41,8 @@ from repro.verif.mismatch import ideal_instance
 class Instr:
     op: str                      # WRITE_WEIGHTS | WRITE_ADDRESSES | RUN |
     #                              INJECT | READ_RATES | READ_WEIGHTS |
-    #                              READ_V | READ_CORR
+    #                              READ_V | READ_CORR |
+    #                              WRITE_PPU_PROGRAM | PPU_RUN
     payload: Any = None
 
 
@@ -79,6 +81,31 @@ def read_corr() -> Instr:
     return Instr("READ_CORR")
 
 
+def write_ppu_program(words) -> Instr:
+    """Upload a PPU-VM program (``repro.ppuvm``): dense int32 words."""
+    from repro.ppuvm import isa
+
+    words = np.asarray(words, np.int32)
+    isa.validate(words)
+    return Instr("WRITE_PPU_PROGRAM", words)
+
+
+def ppu_run(mod=None, noise=None) -> Instr:
+    """Execute the uploaded PPU-VM program against the machine state.
+
+    ``mod`` [n_mod, C] / ``noise`` [R, C] floats are digitized to Q8.8
+    HERE (host side, once) so both co-sim backends consume identical
+    integers — the analog observables (CADC codes) are the only inputs
+    each backend digitizes itself. Appends a ("PPU_W") weight record to
+    the trace: the co-simulation check for *programs*.
+    """
+    from repro.ppuvm import isa
+
+    mod_fp = None if mod is None else isa.to_fixed(mod)
+    noise_fp = None if noise is None else isa.to_fixed(noise)
+    return Instr("PPU_RUN", (mod_fp, noise_fp))
+
+
 # ---------------------------------------------------------------------------
 # Backends
 # ---------------------------------------------------------------------------
@@ -92,6 +119,9 @@ class FastBackend:
         self.core = AnnCore(cfg, self.inst)
         self.state = self.core.init_state()
         self._pending: List[Tuple[np.ndarray, np.ndarray]] = []
+        self._ppu = VectorUnit(cfg, self.inst)
+        self._ppu_prog = None
+        self._ppu_run = jax.jit(self._ppu.run_program_fixed)
 
     def execute(self, program: List[Instr]) -> List[Tuple[int, str, np.ndarray]]:
         trace = []
@@ -125,6 +155,18 @@ class FastBackend:
                 trace.append((t, "V", np.asarray(self.state.neuron.v)))
             elif ins.op == "READ_CORR":
                 trace.append((t, "CORR", np.asarray(self.state.corr.a_causal)))
+            elif ins.op == "WRITE_PPU_PROGRAM":
+                self._ppu_prog = jnp.asarray(ins.payload)
+            elif ins.op == "PPU_RUN":
+                if self._ppu_prog is None:
+                    raise ValueError("PPU_RUN before WRITE_PPU_PROGRAM")
+                mod_fp, noise_fp = ins.payload
+                self.state, _ = self._ppu_run(
+                    self.state, self._ppu_prog,
+                    mod_fp=None if mod_fp is None else jnp.asarray(mod_fp),
+                    noise_fp=None if noise_fp is None
+                    else jnp.asarray(noise_fp))
+                trace.append((t, "PPU_W", np.asarray(self.state.syn.weights)))
             else:
                 raise ValueError(ins.op)
         return trace
@@ -141,6 +183,9 @@ class RefBackend:
         self.gain = np.asarray(inst["weight_gain"])
         self.stp_offset = np.asarray(inst["stp_offset"])
         self.stp_calib = np.asarray(inst["stp_calib"])
+        self.cadc_offset = np.asarray(inst["cadc_offset"], np.float32)
+        self.cadc_gain = np.asarray(inst["cadc_gain"], np.float32)
+        self.ppu_prog = None
         r, c = cfg.n_rows, cfg.n_cols
         self.w = np.zeros((r, c), np.int8)
         self.addr = np.zeros((r, c), np.int8)
@@ -220,6 +265,27 @@ class RefBackend:
         self.rates += sp
         return sp
 
+    def _cadc_digitize(self, a):
+        """NumPy twin of cadc.digitize as used by VectorUnit (in_scale=8)."""
+        lsb = 2 ** self.cfg.cadc_bits - 1
+        code = a * (self.cadc_gain[None, :] * 8.0) + self.cadc_offset[None, :]
+        return np.clip(np.round(code), 0, lsb).astype(np.int32)
+
+    def _ppu_run(self, mod_fp, noise_fp):
+        from repro.ppuvm.interp import run_program_np
+
+        if self.ppu_prog is None:
+            raise ValueError("PPU_RUN before WRITE_PPU_PROGRAM")
+        qc = self._cadc_digitize(self.a_causal)
+        qa = self._cadc_digitize(self.a_acausal)
+        w_new, _ = run_program_np(self.ppu_prog, self.w.astype(np.int32),
+                                  qc, qa, self.rates, mod_fp, noise_fp)
+        self.w = w_new.astype(np.int8)
+        # post-read observable reset, like VectorUnit._reset_observables
+        self.rates = np.zeros_like(self.rates)
+        self.a_causal = np.zeros_like(self.a_causal)
+        self.a_acausal = np.zeros_like(self.a_acausal)
+
     def execute(self, program: List[Instr]) -> List[Tuple[int, str, np.ndarray]]:
         trace = []
         t = 0
@@ -246,6 +312,11 @@ class RefBackend:
                 trace.append((t, "V", self.v.copy()))
             elif ins.op == "READ_CORR":
                 trace.append((t, "CORR", self.a_causal.copy()))
+            elif ins.op == "WRITE_PPU_PROGRAM":
+                self.ppu_prog = ins.payload.copy()
+            elif ins.op == "PPU_RUN":
+                self._ppu_run(*ins.payload)
+                trace.append((t, "PPU_W", self.w.copy()))
             else:
                 raise ValueError(ins.op)
         return trace

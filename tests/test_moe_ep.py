@@ -22,8 +22,8 @@ arch = dataclasses.replace(
     get_arch("moonshot-v1-16b-a3b").reduced(), d_model=32,
     moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=16,
                   n_shared_experts=1, capacity_factor=8.0))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_smoke_mesh
+mesh = make_smoke_mesh((2, 4), ("data", "model"))
 
 # MeshConfig is fixed-shape; build a ctx whose mesh is the small test mesh
 ctx = ShardingCtx(mesh=mesh)

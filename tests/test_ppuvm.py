@@ -1,0 +1,432 @@
+"""PPU-VM subsystem tests (ISSUE 2 tentpole).
+
+Three layers, mirroring the paper's verification strategy:
+
+  1. per-opcode fracsat semantics: JAX executor == NumPy executor ==
+     a python oracle, bit-exact (unit/testbench level, §3.2);
+  2. ISA programs vs their ``repro.core.rules`` float oracles through
+     ``VectorUnit`` (integration level) — equality within one 6-bit
+     weight LSB;
+  3. playback co-simulation: the SAME program words execute on the fast
+     JAX backend and the independent NumPy backend with a
+     ``compare_traces`` PASS (system level, §3.1) — and the VM R-STDP
+     program inside the jitted training scan matches the fixed-function
+     ``apply_rstdp`` path.
+
+``PPUVM_KERNEL_IMPL`` selects the AnnCore kernel impl for the emulation
+windows (CI runs the suite a second time with ``interpret`` so the VM
+stays backend-agnostic w.r.t. the Pallas kernels around it).
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.bss2 import BSS2
+from repro.core import rules
+from repro.core.anncore import AnnCore
+from repro.core.ppu import VectorUnit
+from repro.ppuvm import interp, isa, programs
+from repro.ppuvm.asm import Asm
+from repro.verif.mismatch import sample_instance
+
+KERNEL_IMPL = os.environ.get("PPUVM_KERNEL_IMPL", "auto")
+
+CFG = dataclasses.replace(BSS2.reduced(), n_rows=16, n_cols=16)
+
+
+def _rand_operands(seed=0, r=4, c=4):
+    rng = np.random.RandomState(seed)
+    return dict(
+        weights=rng.randint(0, 64, (r, c)).astype(np.int32),
+        qc=rng.randint(0, 256, (r, c)).astype(np.int32),
+        qa=rng.randint(0, 256, (r, c)).astype(np.int32),
+        rates=rng.randint(0, 30, (c,)).astype(np.float32),
+        mod=isa.to_fixed(rng.uniform(-1, 1, (2, c))),
+        noise=isa.to_fixed(0.3 * rng.randn(r, c)),
+    )
+
+
+def _run_both(words, ops):
+    wj, rj = interp.run_program_jax(
+        jnp.asarray(words), jnp.asarray(ops["weights"]),
+        jnp.asarray(ops["qc"]), jnp.asarray(ops["qa"]),
+        jnp.asarray(ops["rates"]), jnp.asarray(ops["mod"]),
+        jnp.asarray(ops["noise"]))
+    wn, rn = interp.run_program_np(words, ops["weights"], ops["qc"],
+                                   ops["qa"], ops["rates"], ops["mod"],
+                                   ops["noise"])
+    np.testing.assert_array_equal(np.asarray(wj), wn)
+    np.testing.assert_array_equal(np.asarray(rj), rn)
+    return wn, rn
+
+
+# ---------------------------------------------------------------------------
+# 1. per-opcode semantics
+# ---------------------------------------------------------------------------
+
+class TestOpcodes:
+    def test_splat_add_sub_saturate(self):
+        a = Asm()
+        r0, r1 = a.reg("a"), a.reg("b")
+        a.splat(r0, 100.0)
+        a.splat(r1, 60.0)
+        a.add(r0, r0, r1)          # 160 > 127.996 -> saturates
+        a.sub(r1, r1, r0)
+        ops = _rand_operands()
+        _, regs = _run_both(a.build(), ops)
+        assert (regs[0] == isa.I16MAX).all()
+        assert (regs[1] == isa.to_fixed(60.0) - isa.I16MAX).all()
+
+    def test_mulf_rounding_shift(self):
+        """fracsat multiply: (a*b + 2^(s-1)) >> s, saturating."""
+        a = Asm()
+        r0, r1, r2 = a.reg("a"), a.reg("b"), a.reg("c")
+        a.splat(r0, 1.5)
+        a.splat(r1, -2.25)
+        a.mulf(r2, r0, r1)
+        ops = _rand_operands(1)
+        _, regs = _run_both(a.build(), ops)
+        pa, pb = int(isa.to_fixed(1.5)), int(isa.to_fixed(-2.25))
+        expect = (pa * pb + (1 << (isa.FRAC - 1))) >> isa.FRAC
+        assert (regs[2] == expect).all()
+        assert abs(expect / isa.ONE - 1.5 * -2.25) <= 1 / isa.ONE
+
+    def test_shifts(self):
+        a = Asm()
+        r0, r1, r2 = a.reg("a"), a.reg("b"), a.reg("c")
+        a.splat(r0, -3.0)
+        a.shl(r1, r0, 2)
+        a.shr(r2, r0, 3)
+        ops = _rand_operands(2)
+        _, regs = _run_both(a.build(), ops)
+        assert (regs[1] == isa.to_fixed(-12.0)).all()
+        assert (regs[2] == int(isa.to_fixed(-3.0)) >> 3).all()
+
+    def test_cmp_sel_minmax(self):
+        a = Asm()
+        c, x, y, m = a.reg("c"), a.reg("x"), a.reg("y"), a.reg("m")
+        a.ldcausal(x)
+        a.ldacausal(y)
+        a.cmpge(c, x, y)           # mask = qc >= qa
+        a.sel(c, x, y)             # c = max(qc, qa) via blend
+        a.vmax(m, x, y)
+        ops = _rand_operands(3)
+        _, regs = _run_both(a.build(), ops)
+        np.testing.assert_array_equal(regs[0], regs[3])
+        np.testing.assert_array_equal(
+            regs[3], np.maximum(ops["qc"], ops["qa"]))
+        a2 = Asm()
+        x2, y2, m2 = a2.reg("x"), a2.reg("y"), a2.reg("m")
+        a2.ldcausal(x2)
+        a2.ldacausal(y2)
+        a2.vmin(m2, x2, y2)
+        _, regs2 = _run_both(a2.build(), ops)
+        np.testing.assert_array_equal(
+            regs2[2], np.minimum(ops["qc"], ops["qa"]))
+
+    def test_memory_ops(self):
+        """LDW/STW: integer weight load, saturating round-to-6-bit store;
+        CADC loads are exact fractional codes; LDRATE saturates."""
+        a = Asm()
+        w, k = a.reg("w"), a.reg("k")
+        a.ldw(w)
+        a.splat(k, 0.75)
+        a.add(w, w, k)             # w + 0.75 rounds up -> w + 1 (sat 63)
+        a.stw(w)
+        ops = _rand_operands(4)
+        wm, regs = _run_both(a.build(), ops)
+        np.testing.assert_array_equal(wm, np.minimum(ops["weights"] + 1, 63))
+
+        a = Asm()
+        r0 = a.reg("r")
+        a.ldrate(r0)
+        ops2 = dict(ops, rates=np.full((4,), 1000.0, np.float32))
+        _, regs = _run_both(a.build(), ops2)
+        assert (regs[0] == isa.I16MAX).all()   # 1000 >> Q8.8 range
+
+    def test_ldmod_slots_and_noise(self):
+        a = Asm()
+        m0, m1, n = a.reg("m0"), a.reg("m1"), a.reg("n")
+        a.ldmod(m0, 0)
+        a.ldmod(m1, 1)
+        a.ldnoise(n)
+        ops = _rand_operands(5)
+        _, regs = _run_both(a.build(), ops)
+        np.testing.assert_array_equal(
+            regs[0], np.broadcast_to(ops["mod"][0][None, :], (4, 4)))
+        np.testing.assert_array_equal(
+            regs[1], np.broadcast_to(ops["mod"][1][None, :], (4, 4)))
+        np.testing.assert_array_equal(regs[2], ops["noise"])
+
+    def test_executor_fuzz_bit_exact(self):
+        """Random valid instruction streams: the two executors must stay
+        bit-identical (the program-level transparent-interchange
+        property)."""
+        rng = np.random.RandomState(11)
+        alu_ops = [isa.ADD, isa.SUB, isa.MULF, isa.SHL, isa.SHR, isa.CMPGE,
+                   isa.SEL, isa.MAXS, isa.MINS, isa.MOV]
+        for trial in range(10):
+            a = Asm()
+            regs = [a.reg(f"r{i}") for i in range(8)]
+            for r in regs[:4]:
+                a.splat(r, float(rng.uniform(-100, 100)))
+            a.ldw(regs[4])
+            a.ldcausal(regs[5])
+            a.ldacausal(regs[6])
+            a.ldnoise(regs[7])
+            for _ in range(30):
+                op = alu_ops[rng.randint(len(alu_ops))]
+                rd, ra, rb = rng.randint(0, 8, 3)
+                sh = int(rng.randint(0, 16))
+                a.words.append(isa.encode(op, rd, ra, isa.alu_imm(rb, sh)))
+            a.stw(regs[int(rng.randint(0, 8))])
+            _run_both(a.build(), _rand_operands(trial, 8, 8))
+
+    def test_disassembler_roundtrip_smoke(self):
+        text = isa.disassemble(programs.rstdp_program())
+        assert "ldcausal" in text and "stw" in text and "vmulf" in text
+
+    def test_unknown_opcode_is_nop_in_both_executors(self):
+        """Executors must stay bit-identical for ANY word stream: unknown
+        ops run as NOPs in both; playback upload rejects them early."""
+        a = Asm()
+        r0 = a.reg("r")
+        a.splat(r0, 5.0)
+        a.words.append(isa.encode(25, 1, 0, 0))   # not a real opcode
+        a.stw(r0)
+        ops = _rand_operands(7)
+        wm, regs = _run_both(a.build(), ops)
+        assert (wm == 5).all()
+        assert (regs[1] == 0).all()               # unknown op wrote nothing
+        from repro.verif import playback as pb
+        with pytest.raises(ValueError, match="unknown opcode"):
+            pb.write_ppu_program(a.build())
+
+
+# ---------------------------------------------------------------------------
+# 2. ISA programs vs rules.py float oracles
+# ---------------------------------------------------------------------------
+
+def _machine_state(seed=0, prefix=()):
+    inst = sample_instance(CFG, jax.random.PRNGKey(seed), prefix)
+    core = AnnCore(CFG, inst, kernel_impl=KERNEL_IMPL)
+    ppu = VectorUnit(CFG, inst)
+    st = core.init_state(prefix)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 100))
+    w0 = jax.random.randint(k1, (*prefix, CFG.n_rows, CFG.n_cols), 5, 60,
+                            jnp.int32).astype(jnp.int8)
+    st = st._replace(
+        syn=st.syn._replace(weights=w0),
+        corr=st.corr._replace(
+            a_causal=jax.random.uniform(
+                k2, (*prefix, CFG.n_rows, CFG.n_cols), maxval=8.0),
+            a_acausal=jax.random.uniform(
+                jax.random.fold_in(k2, 1),
+                (*prefix, CFG.n_rows, CFG.n_cols), maxval=8.0)),
+        rate_counters=jnp.asarray(
+            np.random.RandomState(seed).randint(
+                0, 20, (*prefix, CFG.n_cols)).astype(np.float32)))
+    return core, ppu, st
+
+
+class TestProgramsVsOracles:
+    def test_rstdp_program_matches_rule(self):
+        core, ppu, st = _machine_state(0)
+        reward = (jax.random.uniform(jax.random.PRNGKey(1),
+                                     (CFG.n_cols,)) < 0.5).astype(jnp.float32)
+        rs = dict(mean_reward=0.3 * jnp.ones(CFG.n_cols),
+                  key=jax.random.PRNGKey(2))
+        st_ref, rs_ref, _ = ppu.apply_rule(rules.rstdp, st, dict(rs),
+                                           reward=reward, eta=0.5,
+                                           gamma=0.3, noise=0.3)
+        prog = jnp.asarray(programs.rstdp_program(eta=0.5))
+        st_vm, rs_vm, _ = ppu.apply_rstdp_program(st, dict(rs), reward=reward,
+                                                  program=prog, gamma=0.3,
+                                                  noise=0.3)
+        d = np.abs(np.asarray(st_vm.syn.weights, np.int32)
+                   - np.asarray(st_ref.syn.weights, np.int32))
+        assert d.max() <= 1, f"max diff {d.max()} LSB"
+        assert (d == 0).mean() > 0.95
+        np.testing.assert_allclose(np.asarray(rs_vm["mean_reward"]),
+                                   np.asarray(rs_ref["mean_reward"]),
+                                   atol=1e-6)
+
+    def test_stdp_program_matches_rule(self):
+        core, ppu, st = _machine_state(1)
+        st_ref, _, _ = ppu.apply_rule(rules.stdp, st, {}, eta_plus=0.8,
+                                      eta_minus=0.9)
+        prog = jnp.asarray(programs.stdp_program(eta_plus=0.8, eta_minus=0.9))
+        st_vm, _ = ppu.run_program(st, prog)
+        d = np.abs(np.asarray(st_vm.syn.weights, np.int32)
+                   - np.asarray(st_ref.syn.weights, np.int32))
+        assert d.max() <= 1, f"max diff {d.max()} LSB"
+        assert (d == 0).mean() > 0.95
+
+    def test_homeostasis_program_matches_rule(self):
+        core, ppu, st = _machine_state(2)
+        st_ref, _, _ = ppu.apply_rule(rules.homeostasis, st, {},
+                                      target_rate=10.0, eta=0.2)
+        prog = jnp.asarray(
+            programs.homeostasis_program(target_rate=10.0, eta=0.2))
+        st_vm, _ = ppu.run_program(st, prog)
+        d = np.abs(np.asarray(st_vm.syn.weights, np.int32)
+                   - np.asarray(st_ref.syn.weights, np.int32))
+        assert d.max() <= 1, f"max diff {d.max()} LSB"
+        assert (d == 0).mean() > 0.95
+
+    def test_observables_reset_after_program(self):
+        _, ppu, st = _machine_state(3)
+        st_vm, _ = ppu.run_program(st, jnp.asarray(programs.stdp_program()))
+        assert float(jnp.sum(st_vm.rate_counters)) == 0.0
+        assert float(jnp.sum(jnp.abs(st_vm.corr.a_causal))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# 3. system level: scan integration + playback co-simulation
+# ---------------------------------------------------------------------------
+
+class TestScanIntegration:
+    def test_vm_rstdp_in_jitted_scan_matches_apply_rstdp(self):
+        """The ISSUE's acceptance check: the ISA-compiled R-STDP program,
+        run by ``VectorUnit.run_program`` INSIDE a jitted lax.scan over
+        trials (emulation window + PPU update per step), matches the
+        fixed-function ``apply_rstdp`` ref path within one 6-bit LSB at
+        every trial."""
+        inst = sample_instance(CFG, jax.random.PRNGKey(5))
+        core = AnnCore(CFG, inst, kernel_impl=KERNEL_IMPL)
+        ppu = VectorUnit(CFG, inst)
+        prog = jnp.asarray(programs.rstdp_program(eta=0.5))
+        n_trials, T, R = 5, 64, CFG.n_rows
+        ev = (jax.random.uniform(jax.random.PRNGKey(1), (n_trials, T, R))
+              < 0.05).astype(jnp.float32)
+        ad = jnp.zeros((n_trials, T, R), jnp.int8)
+        reward = (jax.random.uniform(jax.random.PRNGKey(2),
+                                     (n_trials, CFG.n_cols))
+                  < 0.5).astype(jnp.float32)
+
+        def init():
+            st = core.init_state()
+            return st._replace(syn=st.syn._replace(
+                weights=jnp.full((R, CFG.n_cols), 30, jnp.int8)))
+
+        def make(use_vm):
+            def body(carry, xs):
+                st, rs = carry
+                e, a, r = xs
+                st, _ = core.run(st, e, a)
+                if use_vm:
+                    st, rs, _ = ppu.apply_rstdp_program(
+                        st, rs, reward=r, program=prog, gamma=0.3, noise=0.3)
+                else:
+                    st, rs, _ = ppu.apply_rstdp(st, rs, reward=r, eta=0.5,
+                                                gamma=0.3, noise=0.3,
+                                                impl="ref")
+                return (st, rs), st.syn.weights
+
+            def run():
+                rs = dict(mean_reward=jnp.zeros(CFG.n_cols),
+                          key=jax.random.PRNGKey(9))
+                (st, rs), ws = jax.lax.scan(body, (init(), rs),
+                                            (ev, ad, reward))
+                return ws
+            return jax.jit(run)
+
+        ws_ref = np.asarray(make(False)(), np.int32)
+        ws_vm = np.asarray(make(True)(), np.int32)
+        d = np.abs(ws_vm - ws_ref)
+        assert d.max() <= 1, f"max diff {d.max()} LSB over {len(ws_ref)} trials"
+
+    def test_hybrid_vm_rule_trains(self):
+        """The §5 experiment with the rule as a VM program: same trial
+        structure, learning actually progresses."""
+        from repro.core.hybrid import RSTDPConfig, run_training
+        out, state, meta = run_training(
+            n_trials=60, seed=0, rule_impl="vm",
+            ecfg=RSTDPConfig(trial_steps=128))
+        mr = np.median(out["mean_reward"], axis=1)
+        assert np.isfinite(out["w_signed_final"]).all()
+        assert mr[-15:].mean() > mr[:15].mean(), \
+            (mr[:15].mean(), mr[-15:].mean())
+
+    def test_hybrid_vm_dw_matches_python_rule_first_trial(self):
+        """One trial from identical state: the VM dw readout path and the
+        python ``_signed_rule`` agree on the signed weights to fixed-point
+        tolerance (the closed-loop trajectories may then diverge — that is
+        inherent to quantized feedback, not an implementation gap)."""
+        from repro.core.hybrid import RSTDPConfig, make_experiment
+        ecfg = RSTDPConfig(trial_steps=128)
+        outs = {}
+        for impl in ("python", "vm"):
+            init, trial, meta = make_experiment(
+                ecfg=ecfg, instance_key=jax.random.PRNGKey(3),
+                rule_impl=impl, kernel_impl=KERNEL_IMPL)
+            st = init(jax.random.PRNGKey(4))
+            st2, m = jax.jit(trial)(st, jnp.int32(1))
+            outs[impl] = np.asarray(st2.w_signed)
+        d = np.abs(outs["vm"] - outs["python"])
+        assert d.max() < 0.15, f"max |dw gap| {d.max()}"
+
+
+class TestPlaybackCosim:
+    def _program(self, words, seed=0):
+        from repro.verif import playback as pb
+        rng = np.random.RandomState(seed)
+        r, c = 8, 8
+        w = np.full((r, c), 50, np.int8)
+        addr = np.zeros((r, c), np.int8)
+        ev = np.zeros((100, r), np.float32)
+        ev[10] = 1.0
+        ev[55] = 1.0
+        ev[80, ::2] = 1.0
+        mod = rng.uniform(-1, 1, (2, c)).astype(np.float32)
+        noise = (0.3 * rng.randn(r, c)).astype(np.float32)
+        return [
+            pb.write_weights(w),
+            pb.write_addresses(addr),
+            pb.write_ppu_program(words),
+            pb.inject(ev),
+            pb.ppu_run(mod=mod, noise=noise),
+            pb.read_weights(),
+            pb.run(40),
+            pb.ppu_run(mod=mod),
+            pb.read_weights(),
+            pb.read_rates(),
+        ]
+
+    @pytest.mark.parametrize("builder", [
+        lambda: programs.rstdp_program(eta=0.5),
+        lambda: programs.stdp_program(eta_plus=0.8, eta_minus=0.9),
+        lambda: programs.homeostasis_program(target_rate=4.0),
+    ], ids=["rstdp", "stdp", "homeostasis"])
+    def test_ppu_program_cosim_pass(self, builder):
+        """WRITE_PPU_PROGRAM/PPU_RUN: the same word stream must produce
+        the same trace (incl. the PPU_W weight records) on the fast JAX
+        backend and the independent NumPy backend."""
+        import dataclasses as dc
+        from repro.verif import playback as pb
+        cfg = dc.replace(BSS2.reduced(), n_rows=8, n_cols=8)
+        prog = self._program(builder())
+        tr_fast = pb.execute(prog, "fast", cfg)
+        tr_ref = pb.execute(prog, "ref", cfg)
+        errs = pb.compare_traces(tr_fast, tr_ref, atol=0.05)
+        assert not errs, "\n".join(errs)
+        kinds = [k for _, k, _ in tr_fast]
+        assert kinds.count("PPU_W") == 2
+
+    def test_cosim_detects_program_mutation(self):
+        """A single flipped constant in the uploaded program must be
+        caught by the trace diff — co-simulation for programs."""
+        import dataclasses as dc
+        from repro.verif import playback as pb
+        cfg = dc.replace(BSS2.reduced(), n_rows=8, n_cols=8)
+        good = programs.rstdp_program(eta=0.5)
+        bad = good.copy()
+        bad[3] = isa.encode(isa.SPLAT, 2, 0, isa.splat_imm(3.0))  # eta const
+        tr_good = pb.execute(self._program(good), "ref", cfg)
+        tr_bad = pb.execute(self._program(bad), "fast", cfg)
+        errs = pb.compare_traces(tr_good, tr_bad, atol=0.05)
+        assert errs, "trace diff must detect the mutated program"

@@ -42,6 +42,14 @@ def test_reward_improves_from_start():
 
 
 def test_overlap_zero_also_converges():
+    """Zero overlap is NOT an easier/faster instance: disjoint patterns use
+    2*pattern_size = 10 distinct channels (vs 8 at 40% overlap), i.e. more
+    independent weights to learn. At 300 trials the median <R> was still
+    rising monotonically (0.36/0.46/0.62/0.71/0.76/0.81 per 50-trial
+    window, seed 2) and the trailing-80 mean landed at 0.796 — an
+    under-trained test budget, not a convergence bug. With the same 450
+    trials the fig11 test uses it reaches 0.865 (seed 2) / 0.915 (seed 3).
+    """
     ecfg = RSTDPConfig(overlap=0.0)
-    out, state, meta = run_training(n_trials=300, seed=2, ecfg=ecfg)
+    out, state, meta = run_training(n_trials=450, seed=2, ecfg=ecfg)
     assert _trailing(out["mean_reward"], slice(None), n=80) > 0.8

@@ -202,15 +202,14 @@ from repro.models.transformer import build_model
 from repro.checkpoint import save_checkpoint, restore_checkpoint
 
 arch = get_arch("smollm-360m").reduced()
-mesh1 = jax.make_mesh((2, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_smoke_mesh
+mesh1 = make_smoke_mesh((2, 2), ("data", "model"))
 ctx1 = ShardingCtx(mesh=mesh1)
 bundle = build_model(arch, ctx1)
 params = init_params(bundle.decls, jax.random.PRNGKey(0), ctx1)
 with tempfile.TemporaryDirectory() as d:
     save_checkpoint(d, 1, dict(params=params))
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_smoke_mesh((4, 2), ("data", "model"))
     ctx2 = ShardingCtx(mesh=mesh2)
     sh2 = tree_pspecs(bundle.decls, ctx2)
     step, state = restore_checkpoint(d, shardings=dict(params=sh2))
