@@ -5,7 +5,9 @@
   fig11_rstdp          paper Fig. 11 (R-STDP reward -> ~1 @ 40% overlap)
   step_time            paper §5     (290us claim: scan vs dispatch vs host)
   kernels              Pallas hot-spot microbenchmarks
-  ppuvm                PPU-VM interpreter overhead vs fixed-function rule
+  ppuvm                PPU-VM executor ladder (scan / specialized /
+                       pallas) vs the fixed-function rule; the ladder is
+                       emitted under ``executor_ladder`` in --json output
   roofline             §Roofline table from the dry-run artifacts
 
 Usage:

@@ -75,7 +75,8 @@ def _patterns(ecfg: RSTDPConfig) -> Tuple[np.ndarray, np.ndarray]:
 
 def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                     instance_key=None, prefix=(), backend: str = "auto",
-                    kernel_impl: str = "auto", rule_impl: str = "python"):
+                    kernel_impl: str = "auto", rule_impl: str = "python",
+                    vm_executor: str = "auto"):
     """Build the experiment closure set. Returns (init_fn, trial_fn, meta).
 
     The machine uses 2 rows per input (exc/inh pair, Dale's law: the PPU
@@ -96,6 +97,14 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                 (Eq. 2, xi random walk, Dale row rewrite) is identical, so
                 the two paths differ only by Q8.8 fixed-point rounding of
                 the dw term.
+
+    ``vm_executor`` selects the VM implementation for ``rule_impl="vm"``
+    (see ``repro.ppuvm.interp.EXECUTORS``): the default "auto" resolves
+    to the trace-time specializer — the program words are a closed-over
+    constant of the jitted trial, so the rule compiles to straight-line
+    fixed-point ops with zero interpreter dispatch. All executors are
+    bit-identical (tests/test_ppuvm_fuzz.py), so this is purely a
+    performance axis.
     """
     if cfg is None:
         cfg = dataclasses.replace(
@@ -182,7 +191,8 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
         walk, and rewrites both Dale rows — mirroring ``_signed_rule``."""
         qc, qa = ppu.read_correlation(cs.corr)
         mod = jnp.stack([reward - state.mean_reward, reward], axis=0)
-        cs2, regs = ppu.run_program(cs, _dw_words, mod=mod)
+        cs2, regs = ppu.run_program(cs, _dw_words, mod=mod,
+                                    executor=vm_executor)
         dw = regs[0][..., 0::2, :].astype(jnp.float32) / _visa.ONE
         key, sub = jax.random.split(k_rule)
         xi = ecfg.noise * jax.random.normal(sub, state.w_signed.shape)
@@ -300,7 +310,7 @@ def make_scanned_training(scanned_training):
 def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                  seed: int = 0, cfg: BSS2Config = None, fused: bool = True,
                  scan: bool = None, backend: str = "auto",
-                 rule_impl: str = "python"):
+                 rule_impl: str = "python", vm_executor: str = "auto"):
     """Full §5 experiment. Returns the metrics history (stacked).
 
     Modes:
@@ -312,7 +322,8 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
     """
     init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg,
                                         instance_key=jax.random.PRNGKey(seed),
-                                        backend=backend, rule_impl=rule_impl)
+                                        backend=backend, rule_impl=rule_impl,
+                                        vm_executor=vm_executor)
     state = init(jax.random.PRNGKey(seed + 1))
     stims = jnp.asarray(np.resize([1, 2, 0], n_trials), jnp.int32)
     if scan is None:

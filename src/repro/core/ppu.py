@@ -80,13 +80,21 @@ class VectorUnit:
         )
 
     # -- programmable rule execution (PPU-VM) -------------------------------
-    def run_program(self, state, words, *, mod=None, noise=None):
+    def run_program(self, state, words, *, mod=None, noise=None,
+                    executor: str = "auto"):
         """Execute a PPU-VM program (``repro.ppuvm``) against the machine
         state: the program sees the digitized CADC causal/anti-causal
         codes, the rate counters, optional per-column modulator slots
         (``mod`` [n_mod, ..., C] float) and a per-synapse noise plane
         (``noise`` [..., R, C] float), and may store new 6-bit weights.
         Pure and jit-able — runs inside the fused training scan.
+
+        ``executor`` selects the VM implementation (see
+        ``repro.ppuvm.interp.EXECUTORS``): "auto" compiles via the
+        trace-time specializer when ``words`` is concrete at jit time
+        (host array or closed-over constant) and falls back to the scan
+        interpreter when it is traced; "pallas"/"pallas_interpret" run
+        the whole program per VMEM tile.
 
         Returns (new_state, regs): observables are reset like
         ``apply_rule``; ``regs`` is the final [N_REGS, ..., R, C] register
@@ -95,24 +103,25 @@ class VectorUnit:
         mod_fp = None if mod is None else _to_fixed_j(mod)
         noise_fp = None if noise is None else _to_fixed_j(noise)
         return self.run_program_fixed(state, words, mod_fp=mod_fp,
-                                      noise_fp=noise_fp)
+                                      noise_fp=noise_fp, executor=executor)
 
-    def run_program_fixed(self, state, words, *, mod_fp=None, noise_fp=None):
+    def run_program_fixed(self, state, words, *, mod_fp=None, noise_fp=None,
+                          executor: str = "auto"):
         """Like ``run_program`` but with pre-digitized Q8.8 int32 modulator
         slots / noise plane — the form the playback ``PPU_RUN`` instruction
         carries, so both co-sim backends consume identical integers."""
         from repro.ppuvm import interp
 
         qc, qa = self.read_correlation(state.corr)
-        w_new, regs = interp.run_program_jax(
+        w_new, regs = interp.run_program(
             jnp.asarray(words), state.syn.weights.astype(jnp.int32), qc, qa,
-            state.rate_counters, mod_fp, noise_fp)
+            state.rate_counters, mod_fp, noise_fp, executor=executor)
         syn = state.syn._replace(weights=w_new.astype(jnp.int8))
         return self._reset_observables(state._replace(syn=syn)), regs
 
     def apply_rstdp_program(self, state, rule_state: Dict, *, reward,
                             program, gamma: float = 0.3,
-                            noise: float = 0.3):
+                            noise: float = 0.3, executor: str = "auto"):
         """R-STDP with the Eq.-3 vector part executed as a PPU-VM
         *program* (``repro.ppuvm.programs.rstdp_program``): the scalar
         prologue (Eq. 2 running mean, PRNG advance) matches
@@ -124,7 +133,8 @@ class VectorUnit:
         mod = (reward - mean_r)[None]                            # slot 0
         key, sub = jax.random.split(rule_state["key"])
         xi = noise * jax.random.normal(sub, state.syn.weights.shape)
-        new_state, regs = self.run_program(state, program, mod=mod, noise=xi)
+        new_state, regs = self.run_program(state, program, mod=mod, noise=xi,
+                                           executor=executor)
         return new_state, dict(mean_reward=mean_r_new, key=key), regs
 
     # -- fused rule application --------------------------------------------

@@ -1,0 +1,4 @@
+"""Pallas tile-VM executor for PPU-VM programs: the whole program runs
+per VMEM tile (registers on-chip, one grid pass over the synapse array).
+See ``kernel`` for the tile VM and ``ops`` for the public wrapper."""
+from repro.kernels.ppuvm_exec import kernel, ops  # noqa: F401

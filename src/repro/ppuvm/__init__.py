@@ -2,9 +2,15 @@
 processing unit — learning rules become uploadable programs (paper §2.2,
 §3.1, §5).
 
-  isa       numeric model, opcode table, encoding
-  asm       assembler / program builder -> dense int32 words
-  interp    jit-able JAX executor + independent NumPy executor
-  programs  R-STDP / STDP / homeostasis written in the ISA
+  isa        numeric model, opcode table, encoding
+  asm        assembler / program builder -> dense int32 words
+  interp     scan interpreter + NumPy reference + executor registry
+             (``interp.run_program(words, ..., executor=...)``)
+  specialize trace-time specializer: concrete word streams unrolled to
+             straight-line jnp ops at jit time
+  programs   R-STDP / STDP / homeostasis written in the ISA
+
+The Pallas tile-VM executor lives in ``repro.kernels.ppuvm_exec``; all
+executors are bit-identical (tests/test_ppuvm_fuzz.py).
 """
-from repro.ppuvm import asm, interp, isa, programs  # noqa: F401
+from repro.ppuvm import asm, interp, isa, programs, specialize  # noqa: F401

@@ -1,17 +1,38 @@
-"""Two interchangeable executors for the PPU-VM ISA (paper §3.1).
+"""Executors for the PPU-VM ISA (paper §3.1) and the executor registry.
 
-``run_program_jax``
-    The production executor: a ``lax.scan`` over the instruction words with
-    a ``lax.switch`` over opcodes — one jit-able pure function, so a VM
-    program can run *inside* the fused training scan (the hybrid-plasticity
-    property: rule execution never leaves the device program).
+Four interchangeable implementations run the same int32 word stream:
 
-``run_program_np``
+``run_program_jax``   ("scan")
+    A ``lax.scan`` over the instruction words with a ``lax.switch`` over
+    opcodes — one jit-able pure function that works for *traced* word
+    streams, so a VM program can be an argument of a jitted function.
+
+``repro.ppuvm.specialize.run_program_specialized``   ("specialized")
+    The trace-time specializer: when the word stream is concrete at jit
+    time it is decoded in Python and unrolled into straight-line jnp ops
+    (no scan, no switch) — the compiled-program fast path.
+
+``repro.kernels.ppuvm_exec``   ("pallas" / "pallas_interpret")
+    A Pallas kernel that runs the whole program per VMEM tile — registers
+    live on-chip for the entire program, one grid pass over the synapse
+    array, the TPU analogue of the PPU executing its kernel out of SRAM.
+
+``run_program_np``   ("numpy")
     An independent straight-loop NumPy interpreter with the same integer
-    semantics, used by the RefBackend of the playback co-simulation. Both
-    executors are integer-exact: given identical inputs they must produce
-    bit-identical registers and weights — that equality is the
-    transparent-interchange check, now for *programs* instead of traces.
+    semantics, used by the RefBackend of the playback co-simulation.
+
+All four are integer-exact: given identical inputs they must produce
+bit-identical registers and weights — the transparent-interchange check
+of the paper, enforced across random programs by
+``tests/test_ppuvm_fuzz.py`` (the differential fuzz harness).
+
+``run_program(words, ..., executor="auto")`` is the front door: ``auto``
+picks the specializer when the words are concrete (host array or
+closed-over constant under jit) and the scan interpreter when they are a
+tracer. The JAX-side semantics live in ONE place — ``make_branches`` /
+``step_word`` — which the scan interpreter, the specializer, and the
+Pallas kernel all dispatch through, so a semantics change cannot
+silently fork the executors.
 
 Inputs (see ``repro.ppuvm.isa`` for the numeric model):
   words    [P]            int32 instruction stream
@@ -35,17 +56,27 @@ from repro.ppuvm import isa
 
 assert isa.FRAC == 8, "CADC fractional loads assume Q8.8"
 
+#: executor names accepted by ``run_program`` (and everything that
+#: threads an ``executor=`` through to it: ``VectorUnit.run_program``,
+#: ``hybrid.make_experiment(vm_executor=...)``, playback's
+#: ``FastBackend(ppu_executor=...)``).
+EXECUTORS = ("auto", "scan", "specialized", "pallas", "pallas_interpret",
+             "numpy")
+
 
 # ---------------------------------------------------------------------------
-# JAX executor
+# Shared JAX semantics: operand preparation, branch table, one-word step
 # ---------------------------------------------------------------------------
 
-def run_program_jax(words, weights, qc, qa, rates, mod=None, noise=None):
+def prepare_operands(weights, qc, qa, rates, mod=None, noise=None):
+    """Broadcast/digitize the operand planes to the lane shape (the form
+    every JAX executor consumes): int32 weights, int32 qc/qa, saturated
+    fixed-point rates, [n_mod, *lane] modulator slots, int32 noise."""
     lane_shape = weights.shape
-    weights = weights.astype(jnp.int32)
+    wmem = weights.astype(jnp.int32)
     qc = jnp.broadcast_to(qc, lane_shape).astype(jnp.int32)
     qa = jnp.broadcast_to(qa, lane_shape).astype(jnp.int32)
-    rates_fx = _sat_j(jnp.round(rates).astype(jnp.int32) << isa.FRAC)
+    rates_fx = rates_to_fixed(rates)
     rates_fx = jnp.broadcast_to(rates_fx[..., None, :], lane_shape)
     if mod is None:
         mod = jnp.zeros((1, *lane_shape[:-2], lane_shape[-1]), jnp.int32)
@@ -54,81 +85,168 @@ def run_program_jax(words, weights, qc, qa, rates, mod=None, noise=None):
     if noise is None:
         noise = jnp.zeros(lane_shape, jnp.int32)
     noise = jnp.broadcast_to(noise, lane_shape).astype(jnp.int32)
+    return wmem, qc, qa, rates_fx, mod, noise
 
-    regs0 = jnp.zeros((isa.N_REGS, *lane_shape), jnp.int32)
 
-    def sel_branch(regs, wmem, a, b, rd, sh, simm):
-        mask = regs[rd] != 0
-        return regs.at[rd].set(jnp.where(mask, a, b)), wmem
+def rates_to_fixed(rates):
+    """Rate counters (integer-valued float) -> saturated Q8.8 int32."""
+    return _sat_j(jnp.round(rates).astype(jnp.int32) << isa.FRAC)
 
-    def stw_branch(regs, wmem, a, b, rd, sh, simm):
-        return regs, jnp.clip((a + (isa.ONE >> 1)) >> isa.FRAC, 0, isa.WMAX)
 
-    def ldmod_branch(regs, wmem, a, b, rd, sh, simm):
-        slot = jnp.clip(simm & 0xFF, 0, mod.shape[0] - 1)
-        return regs.at[rd].set(mod[slot]), wmem
+def make_semantics(lane_shape, qc, qa, rates_fx, mod, noise):
+    """The per-opcode semantics, storage-agnostic: a list over opcodes of
 
-    def _valb(fn):
-        def br(regs, wmem, a, b, rd, sh, simm):
-            return regs.at[rd].set(fn(a, b, sh, simm)), wmem
-        return br
+        fn(a, b, r_rd, wmem, sh, simm) -> (rd_value | None, new_wmem)
 
-    branches = [None] * isa.N_OPS
-    branches[isa.NOP] = lambda regs, wmem, a, b, rd, sh, simm: (regs, wmem)
-    branches[isa.SPLAT] = _valb(
-        lambda a, b, sh, simm: jnp.broadcast_to(simm, lane_shape))
-    branches[isa.MOV] = _valb(lambda a, b, sh, simm: a)
-    branches[isa.ADD] = _valb(lambda a, b, sh, simm: _sat_j(a + b))
-    branches[isa.SUB] = _valb(lambda a, b, sh, simm: _sat_j(a - b))
+    where ``a``/``b`` are the source register values, ``r_rd`` the
+    current *destination* value (only SEL reads it) and ``None`` means
+    "rd unchanged". All operands must already be broadcast to
+    ``lane_shape`` (``mod`` to ``[n_mod, *lane_shape]``) — see
+    ``prepare_operands``.
+
+    This is the single source of the JAX-side ISA arithmetic: the scan
+    interpreter and the Pallas tile VM wrap it over a stacked register
+    file (``make_branches``), the trace-time specializer applies it to a
+    Python register list — so the executors cannot fork semantically,
+    they only differ in dispatch and register storage.
+    """
+
+    def _val(fn):
+        return lambda a, b, r_rd, wmem, sh, simm: (fn(a, b, sh, simm), wmem)
+
+    sem = [None] * isa.N_OPS
+    sem[isa.NOP] = lambda a, b, r_rd, wmem, sh, simm: (None, wmem)
+    sem[isa.SPLAT] = _val(
+        lambda a, b, sh, simm: jnp.broadcast_to(
+            jnp.int32(simm), lane_shape))
+    sem[isa.MOV] = _val(lambda a, b, sh, simm: a)
+    sem[isa.ADD] = _val(lambda a, b, sh, simm: _sat_j(a + b))
+    sem[isa.SUB] = _val(lambda a, b, sh, simm: _sat_j(a - b))
     # shift clamp 16: registers are Q8.8 halfwords, so larger shifts are
     # meaningless — and 1 << sh must stay well inside int32
-    branches[isa.MULF] = _valb(
+    sem[isa.MULF] = _val(
         lambda a, b, sh, simm: _sat_j(
             (a * b + ((1 << jnp.minimum(sh, 16)) >> 1))
             >> jnp.minimum(sh, 16)))
-    branches[isa.SHL] = _valb(
+    sem[isa.SHL] = _val(
         lambda a, b, sh, simm: _sat_j(a << jnp.minimum(sh, 15)))
-    branches[isa.SHR] = _valb(lambda a, b, sh, simm: a >> jnp.minimum(sh, 31))
-    branches[isa.CMPGE] = _valb(
+    sem[isa.SHR] = _val(lambda a, b, sh, simm: a >> jnp.minimum(sh, 31))
+    sem[isa.CMPGE] = _val(
         lambda a, b, sh, simm: jnp.where(a >= b, isa.ONE, 0))
-    branches[isa.SEL] = sel_branch
-    branches[isa.MAXS] = _valb(lambda a, b, sh, simm: jnp.maximum(a, b))
-    branches[isa.MINS] = _valb(lambda a, b, sh, simm: jnp.minimum(a, b))
-    branches[isa.LDW] = lambda regs, wmem, a, b, rd, sh, simm: (
-        regs.at[rd].set(wmem << isa.FRAC), wmem)
-    branches[isa.STW] = stw_branch
-    branches[isa.LDCAUSAL] = _valb(lambda a, b, sh, simm: qc)
-    branches[isa.LDACAUSAL] = _valb(lambda a, b, sh, simm: qa)
-    branches[isa.LDRATE] = _valb(lambda a, b, sh, simm: rates_fx)
-    branches[isa.LDMOD] = ldmod_branch
-    branches[isa.LDNOISE] = _valb(lambda a, b, sh, simm: noise)
+    sem[isa.SEL] = lambda a, b, r_rd, wmem, sh, simm: (
+        jnp.where(r_rd != 0, a, b), wmem)
+    sem[isa.MAXS] = _val(lambda a, b, sh, simm: jnp.maximum(a, b))
+    sem[isa.MINS] = _val(lambda a, b, sh, simm: jnp.minimum(a, b))
+    sem[isa.LDW] = lambda a, b, r_rd, wmem, sh, simm: (
+        wmem << isa.FRAC, wmem)
+    sem[isa.STW] = lambda a, b, r_rd, wmem, sh, simm: (
+        None, jnp.clip((a + (isa.ONE >> 1)) >> isa.FRAC, 0, isa.WMAX))
+    sem[isa.LDCAUSAL] = _val(lambda a, b, sh, simm: qc)
+    sem[isa.LDACAUSAL] = _val(lambda a, b, sh, simm: qa)
+    sem[isa.LDRATE] = _val(lambda a, b, sh, simm: rates_fx)
+    sem[isa.LDMOD] = lambda a, b, r_rd, wmem, sh, simm: (
+        mod[jnp.clip(simm & 0xFF, 0, mod.shape[0] - 1)], wmem)
+    sem[isa.LDNOISE] = _val(lambda a, b, sh, simm: noise)
+    return sem
+
+
+def make_branches(lane_shape, qc, qa, rates_fx, mod, noise):
+    """``make_semantics`` wrapped for a stacked [N_REGS, *lane] register
+    file — the lax.switch branch table of the scan interpreter and the
+    Pallas tile VM (where ``lane_shape`` is one VMEM tile)."""
+    sem = make_semantics(lane_shape, qc, qa, rates_fx, mod, noise)
+
+    def wrap(fn):
+        def br(regs, wmem, a, b, rd, sh, simm):
+            val, wmem = fn(a, b, regs[rd], wmem, sh, simm)
+            return (regs if val is None else regs.at[rd].set(val)), wmem
+        return br
+
+    return [wrap(fn) for fn in sem]
+
+
+def step_word(branches, regs, wmem, word):
+    """Execute ONE traced instruction word against (regs, wmem). Unknown
+    opcodes execute as NOP — identical in every executor, so the
+    bit-interchange contract holds for ANY word stream; playback's
+    WRITE_PPU_PROGRAM additionally rejects them up front."""
+    op = (word >> 26) & 0x3F
+    rd = (word >> 21) & 0x1F
+    ra = (word >> 16) & 0x1F
+    imm = word & 0xFFFF
+    simm = imm - ((imm & 0x8000) << 1)
+    rb = (imm >> 8) & 0x1F
+    sh = imm & 0xFF
+    a = regs[ra % isa.N_REGS]
+    b = regs[rb % isa.N_REGS]
+    return jax.lax.switch(
+        jnp.where(op < isa.N_OPS, op, isa.NOP), branches,
+        regs, wmem, a, b, rd % isa.N_REGS, sh, simm)
+
+
+# ---------------------------------------------------------------------------
+# "scan" executor: lax.scan over words, lax.switch over opcodes
+# ---------------------------------------------------------------------------
+
+def run_program_jax(words, weights, qc, qa, rates, mod=None, noise=None):
+    lane_shape = weights.shape
+    wmem, qc, qa, rates_fx, mod, noise = prepare_operands(
+        weights, qc, qa, rates, mod, noise)
+    branches = make_branches(lane_shape, qc, qa, rates_fx, mod, noise)
+    regs0 = jnp.zeros((isa.N_REGS, *lane_shape), jnp.int32)
 
     def step(carry, word):
         regs, wmem = carry
-        op = (word >> 26) & 0x3F
-        rd = (word >> 21) & 0x1F
-        ra = (word >> 16) & 0x1F
-        imm = word & 0xFFFF
-        simm = imm - ((imm & 0x8000) << 1)
-        rb = (imm >> 8) & 0x1F
-        sh = imm & 0xFF
-        a = regs[ra % isa.N_REGS]
-        b = regs[rb % isa.N_REGS]
-        # unknown opcodes execute as NOP — identical in both executors,
-        # so the bit-interchange contract holds for ANY word stream;
-        # playback's WRITE_PPU_PROGRAM additionally rejects them up front
-        regs, wmem = jax.lax.switch(
-            jnp.where(op < isa.N_OPS, op, isa.NOP), branches,
-            regs, wmem, a, b, rd % isa.N_REGS, sh, simm)
-        return (regs, wmem), None
+        return step_word(branches, regs, wmem, word), None
 
-    (regs, wmem), _ = jax.lax.scan(step, (regs0, weights),
+    (regs, wmem), _ = jax.lax.scan(step, (regs0, wmem),
                                    jnp.asarray(words, jnp.int32))
     return wmem, regs
 
 
 def _sat_j(x):
     return jnp.clip(x, isa.I16MIN, isa.I16MAX)
+
+
+# ---------------------------------------------------------------------------
+# Executor registry / front door
+# ---------------------------------------------------------------------------
+
+def resolve_executor(executor: str, words) -> str:
+    """Resolve ``"auto"``: the specializer needs the word stream concrete
+    at trace time (a host array, or a constant closed over by the jitted
+    function); a traced word stream falls back to the scan interpreter."""
+    if executor not in EXECUTORS:
+        raise ValueError(f"unknown executor {executor!r}; one of {EXECUTORS}")
+    if executor != "auto":
+        return executor
+    return "scan" if isinstance(words, jax.core.Tracer) else "specialized"
+
+
+def run_program(words, weights, qc, qa, rates, mod=None, noise=None, *,
+                executor: str = "auto"):
+    """Run a PPU-VM program with a selectable executor (the pluggable
+    axis): "scan" | "specialized" | "pallas" | "pallas_interpret" |
+    "numpy" | "auto". "numpy" requires all-concrete inputs (it is the
+    co-sim reference, not a jit path)."""
+    ex = resolve_executor(executor, words)
+    if ex == "scan":
+        return run_program_jax(words, weights, qc, qa, rates, mod, noise)
+    if ex == "specialized":
+        from repro.ppuvm import specialize
+        return specialize.run_program_specialized(
+            words, weights, qc, qa, rates, mod, noise)
+    if ex in ("pallas", "pallas_interpret"):
+        from repro.kernels.ppuvm_exec import ops as exec_ops
+        return exec_ops.run_program_tiled(
+            words, weights, qc, qa, rates, mod, noise,
+            interpret=(ex == "pallas_interpret"))
+    wmem, regs = run_program_np(np.asarray(words), np.asarray(weights),
+                                np.asarray(qc), np.asarray(qa),
+                                np.asarray(rates),
+                                None if mod is None else np.asarray(mod),
+                                None if noise is None else np.asarray(noise))
+    return jnp.asarray(wmem), jnp.asarray(regs)
 
 
 # ---------------------------------------------------------------------------

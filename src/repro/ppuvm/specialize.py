@@ -1,0 +1,75 @@
+"""Trace-time specializer: compile a *concrete* PPU-VM word stream into
+straight-line jnp ops.
+
+The scan interpreter (``interp.run_program_jax``) pays a ``lax.switch``
+over all opcodes per instruction — ~5.3x rule-only overhead vs the
+fixed-function path (``BENCH_pr2_ppuvm.json``). But almost every real use
+runs a program that is *static at jit time*: the word stream is a host
+array or a constant closed over by the jitted trial. In that case the VM
+dispatch can happen at TRACE time — decode each word in Python and call
+only the branch that instruction actually takes — and the jitted graph is
+exactly what a hand-fused implementation of the same rule would produce
+(XLA then fuses the straight-line integer ops and dead-code-eliminates
+unread registers). The uploadable-words interface is unchanged: the same
+int32 program image feeds every executor.
+
+This is the software analogue of the hardware flow in paper §3.1: the
+program is "compiled onto" the substrate ahead of execution, while the
+scan interpreter remains the general path for traced word streams, and
+the NumPy interpreter the independent reference.
+
+Semantics are NOT re-implemented here: each unrolled instruction invokes
+the same ``interp.make_branches`` table the scan interpreter (and the
+Pallas tile VM) dispatches through — only the dispatch is erased — so the
+specializer cannot fork from the other JAX executors. Bit-exact
+equivalence of all executors is additionally enforced by
+``tests/test_ppuvm_fuzz.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ppuvm import isa
+from repro.ppuvm.interp import make_semantics, prepare_operands
+
+
+def run_program_specialized(words, weights, qc, qa, rates, mod=None,
+                            noise=None):
+    """Unroll a concrete word stream into straight-line jnp ops.
+
+    ``words`` must be concrete (NumPy array, host list, or a non-traced
+    device array) — a traced stream cannot be decoded at trace time; use
+    the "scan" executor for that (``interp.resolve_executor`` does this
+    automatically for ``executor="auto"``).
+
+    Same signature and return convention as ``interp.run_program_jax``:
+    ``(weights_out int32 [..., R, C], regs int32 [N_REGS, ..., R, C])``.
+    """
+    if isinstance(words, jax.core.Tracer):
+        raise TypeError(
+            "specialized executor needs a concrete word stream (got a "
+            "tracer) — pass the program as a closed-over constant, or use "
+            'executor="scan"')
+    words = np.asarray(words, np.int64)
+
+    lane_shape = weights.shape
+    wmem, qc, qa, rates_fx, mod, noise = prepare_operands(
+        weights, qc, qa, rates, mod, noise)
+    sem = make_semantics(lane_shape, qc, qa, rates_fx, mod, noise)
+    # registers as a Python LIST (not a stacked array): every write is a
+    # plain rebind, so the emitted graph is pure straight-line dataflow
+    # and XLA dead-code-eliminates registers the program never stores
+    regs = [jnp.zeros(lane_shape, jnp.int32) for _ in range(isa.N_REGS)]
+
+    for word in words:
+        op, rd, ra, rb, sh, simm = isa.decode(int(word))
+        if op >= isa.N_OPS:
+            continue                  # unknown opcodes are NOPs everywhere
+        rd %= isa.N_REGS
+        val, wmem = sem[op](regs[ra % isa.N_REGS], regs[rb % isa.N_REGS],
+                            regs[rd], wmem, sh, simm)
+        if val is not None:
+            regs[rd] = val
+    return wmem, jnp.stack(regs)

@@ -111,17 +111,46 @@ def ppu_run(mod=None, noise=None) -> Instr:
 # ---------------------------------------------------------------------------
 
 class FastBackend:
-    """The production machine model (jit + lax.scan)."""
+    """The production machine model (jit + lax.scan).
 
-    def __init__(self, cfg: BSS2Config, inst=None):
+    ``ppu_executor`` selects the PPU-VM implementation used by
+    ``PPU_RUN`` (see ``repro.ppuvm.interp.EXECUTORS``): at program upload
+    the words are concrete, so each upload binds a jitted closure with
+    the program as a compile-time constant — "auto" therefore resolves to
+    the trace-time specializer. All executors are bit-identical (the
+    differential fuzz harness), so every choice must produce the same
+    trace as the NumPy RefBackend.
+    """
+
+    def __init__(self, cfg: BSS2Config, inst=None,
+                 ppu_executor: str = "auto"):
         self.cfg = cfg
         self.inst = inst or ideal_instance(cfg)
         self.core = AnnCore(cfg, self.inst)
         self.state = self.core.init_state()
         self._pending: List[Tuple[np.ndarray, np.ndarray]] = []
         self._ppu = VectorUnit(cfg, self.inst)
+        self.ppu_executor = ppu_executor
         self._ppu_prog = None
-        self._ppu_run = jax.jit(self._ppu.run_program_fixed)
+        self._ppu_run = None
+
+    def _bind_program(self, words: np.ndarray):
+        """Jit one PPU_RUN closure per uploaded program: the word stream
+        is a concrete constant of the traced function, which is what lets
+        the specialized executor unroll it at trace time."""
+        from repro.ppuvm import interp
+
+        ex = interp.resolve_executor(self.ppu_executor, words)
+        self._ppu_prog = jnp.asarray(words)
+
+        def run(state, mod_fp, noise_fp):
+            return self._ppu.run_program_fixed(
+                state, self._ppu_prog, mod_fp=mod_fp, noise_fp=noise_fp,
+                executor=ex)
+
+        # the numpy executor is host-side by definition — it must see
+        # concrete arrays, so it runs eagerly instead of under jit
+        self._ppu_run = run if ex == "numpy" else jax.jit(run)
 
     def execute(self, program: List[Instr]) -> List[Tuple[int, str, np.ndarray]]:
         trace = []
@@ -156,16 +185,15 @@ class FastBackend:
             elif ins.op == "READ_CORR":
                 trace.append((t, "CORR", np.asarray(self.state.corr.a_causal)))
             elif ins.op == "WRITE_PPU_PROGRAM":
-                self._ppu_prog = jnp.asarray(ins.payload)
+                self._bind_program(ins.payload)
             elif ins.op == "PPU_RUN":
                 if self._ppu_prog is None:
                     raise ValueError("PPU_RUN before WRITE_PPU_PROGRAM")
                 mod_fp, noise_fp = ins.payload
                 self.state, _ = self._ppu_run(
-                    self.state, self._ppu_prog,
-                    mod_fp=None if mod_fp is None else jnp.asarray(mod_fp),
-                    noise_fp=None if noise_fp is None
-                    else jnp.asarray(noise_fp))
+                    self.state,
+                    None if mod_fp is None else jnp.asarray(mod_fp),
+                    None if noise_fp is None else jnp.asarray(noise_fp))
                 trace.append((t, "PPU_W", np.asarray(self.state.syn.weights)))
             else:
                 raise ValueError(ins.op)
@@ -322,8 +350,14 @@ class RefBackend:
         return trace
 
 
-def execute(program: List[Instr], backend: str, cfg: BSS2Config, inst=None):
-    be = FastBackend(cfg, inst) if backend == "fast" else RefBackend(cfg, inst)
+def execute(program: List[Instr], backend: str, cfg: BSS2Config, inst=None,
+            ppu_executor: str = "auto"):
+    """Run a playback program. ``backend`` is "fast" (jitted machine
+    model) or "ref" (independent NumPy loop); ``ppu_executor`` picks the
+    fast backend's PPU-VM executor (ignored by "ref", which always runs
+    the independent NumPy interpreter)."""
+    be = (FastBackend(cfg, inst, ppu_executor=ppu_executor)
+          if backend == "fast" else RefBackend(cfg, inst))
     return be.execute(program)
 
 

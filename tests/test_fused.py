@@ -94,6 +94,23 @@ class TestFusedRunEquivalence:
                                    np.asarray(o2["spikes"]), **TOL)
         _assert_state_close(s1, s2)
 
+    def test_fallback_multi_address_matches_oracle(self):
+        """Multi-address event streams (addresses changing per step) MUST
+        run off the fast path: a fused core without the const_addr promise
+        takes the general per-step mask and still matches the oracle."""
+        oracle, fused, st = _cores(())           # const_addr defaults False
+        assert fused.const_addr is False
+        ev, ad = _events(150, (), key=5, n_addr=4)
+        # make the address schedule aggressively time-varying: every step
+        # cycles which rows can match at all
+        ad = (ad + jnp.arange(150, dtype=jnp.int8)[:, None] % 4) % 4
+        s1, o1 = jax.jit(oracle.run)(st, ev, ad)
+        s2, o2 = jax.jit(fused.run)(st, ev, ad)
+        assert float(o1["spikes"].sum()) > 0
+        np.testing.assert_allclose(np.asarray(o1["spikes"]),
+                                   np.asarray(o2["spikes"]), **TOL)
+        _assert_state_close(s1, s2)
+
     def test_interpret_kernels_match_oracle(self):
         """Integration through the actual Pallas kernels (interpret mode):
         synray + corr wired into the fused run."""
@@ -106,6 +123,95 @@ class TestFusedRunEquivalence:
         np.testing.assert_allclose(np.asarray(s1.corr.a_causal),
                                    np.asarray(s2.corr.a_causal),
                                    rtol=1e-3, atol=1e-3)
+
+
+class TestConstAddrWindow:
+    """Dedicated coverage for the PR 1 const_addr fast path: the
+    address-match mask resolved ONCE per window (`synapse.
+    synaptic_current_window(const_addr=True)`) vs the general per-step
+    path vs the literal per-step oracle."""
+
+    def _operands(self, T=48, n_addr=4, key=0):
+        from repro.core import synapse
+        ks = jax.random.split(jax.random.PRNGKey(key), 4)
+        w = jax.random.randint(ks[0], (CFG.n_rows, CFG.n_cols), 0, 64,
+                               jnp.int8)
+        a = jax.random.randint(ks[1], (CFG.n_rows, CFG.n_cols), 0, n_addr,
+                               jnp.int8)
+        ev = (jax.random.uniform(ks[2], (T, CFG.n_rows)) < 0.3
+              ).astype(jnp.float32)
+        row_addr = jax.random.randint(ks[3], (CFG.n_rows,), 0, n_addr,
+                                      jnp.int8)
+        return synapse.SynapseArray(w, a), ev, row_addr
+
+    def test_const_addr_matches_general_and_per_step(self):
+        """Row-constant event addresses spanning several distinct values:
+        fast path == general window path == per-step oracle."""
+        from repro.core import synapse
+        syn, ev, row_addr = self._operands()
+        ad_t = jnp.broadcast_to(row_addr, ev.shape)
+        i_fast = synapse.synaptic_current_window(
+            syn.weights, syn.addresses, ev, ad_t, 1.0, impl="ref",
+            const_addr=True)
+        i_gen = synapse.synaptic_current_window(
+            syn.weights, syn.addresses, ev, ad_t, 1.0, impl="ref",
+            const_addr=False)
+        i_step = jnp.stack([
+            synapse.synaptic_current(syn.weights, syn.addresses, ev[t],
+                                     ad_t[t], 1.0)
+            for t in range(ev.shape[0])])
+        np.testing.assert_allclose(np.asarray(i_fast), np.asarray(i_gen),
+                                   **TOL)
+        np.testing.assert_allclose(np.asarray(i_fast), np.asarray(i_step),
+                                   **TOL)
+
+    def test_multi_address_stream_requires_fallback(self):
+        """A time-varying (multi-address) stream: the general path matches
+        the per-step oracle, while the const_addr fast path — which
+        freezes the step-0 mask — provably diverges. This is the contract
+        that multi-source rows must FALL BACK off the fast path."""
+        from repro.core import synapse
+        syn, ev, _ = self._operands()
+        T = ev.shape[0]
+        # step 0 carries address 5 (matches NO synapse: stored addrs < 4),
+        # later steps carry matching addresses -> frozen mask kills all
+        # current on the fast path, the general path forwards it
+        ad_t = jnp.concatenate([
+            jnp.full((1, CFG.n_rows), 5, jnp.int8),
+            jnp.zeros((T - 1, CFG.n_rows), jnp.int8)])
+        i_gen = synapse.synaptic_current_window(
+            syn.weights, syn.addresses, ev, ad_t, 1.0, impl="ref",
+            const_addr=False)
+        i_step = jnp.stack([
+            synapse.synaptic_current(syn.weights, syn.addresses, ev[t],
+                                     ad_t[t], 1.0)
+            for t in range(T)])
+        np.testing.assert_allclose(np.asarray(i_gen), np.asarray(i_step),
+                                   **TOL)
+        i_fast = synapse.synaptic_current_window(
+            syn.weights, syn.addresses, ev, ad_t, 1.0, impl="ref",
+            const_addr=True)
+        assert float(jnp.abs(i_fast).sum()) == 0.0, \
+            "frozen step-0 mask must kill all current here"
+        assert float(jnp.abs(i_gen).sum()) > 0.0, \
+            "general path must forward the later matching events"
+
+    def test_fused_core_const_addr_equals_general_core(self):
+        """End-to-end: two fused cores (with/without the promise) on a
+        row-constant stream produce identical dynamics."""
+        inst = sample_instance(CFG, jax.random.PRNGKey(0), ())
+        fast = AnnCore(CFG, inst, backend="fused", const_addr=True)
+        gen = AnnCore(CFG, inst, backend="fused", const_addr=False)
+        _, _, st = _cores(())
+        ev, _ = _events(100, (), key=6)
+        ad = jnp.broadcast_to(
+            jax.random.randint(jax.random.PRNGKey(7), (CFG.n_rows,), 0, 4,
+                               jnp.int8), ev.shape)
+        s1, o1 = jax.jit(fast.run)(st, ev, ad)
+        s2, o2 = jax.jit(gen.run)(st, ev, ad)
+        np.testing.assert_allclose(np.asarray(o1["spikes"]),
+                                   np.asarray(o2["spikes"]), **TOL)
+        _assert_state_close(s1, s2)
 
 
 class TestApplyRstdpKernelRouting:

@@ -1,0 +1,283 @@
+"""Differential fuzz harness for the PPU-VM executors (ISSUE 3).
+
+The paper's verification methodology in miniature: the same program runs
+on independent implementations and the results are diffed (§3-§4). Here
+the implementations are the four executors —
+
+  numpy        straight-loop reference (repro.ppuvm.interp.run_program_np)
+  scan         lax.scan + lax.switch interpreter (run_program_jax)
+  specialized  trace-time specializer (repro.ppuvm.specialize)
+  pallas       tile VM in kernel-interpret mode (repro.kernels.ppuvm_exec)
+
+— and the contract is BIT-identical weights and registers for *every
+valid word stream*, not just the shipped programs. The generator
+produces bounded random programs in which every opcode is reachable,
+with random register/row operands; operand planes mix random values with
+saturation edge cases (±1.0, ±1 LSB, the 0x7FFF/0x8000 rails, 6-bit
+weight extremes, CADC code extremes, rate-counter overflow).
+
+Runs on plain numpy RNG so the corpus is deterministic and needs no
+extra deps; when `hypothesis` is installed (CI tier-2) an additional
+property-based pass draws programs from strategies.
+
+All programs are NOP-padded to a fixed length so the scan and Pallas
+executors hit their jit caches across the whole corpus.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ppuvm_exec import ops as exec_ops
+from repro.ppuvm import interp, isa, specialize
+from repro.ppuvm.asm import Asm
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+R, C = 8, 8
+PAD_LEN = 40                    # fixed word count -> one jit cache entry
+
+# saturation / wrap-candidate corpus the generator must draw from:
+# ±1.0, ±1 LSB, the int16 rails (0x7FFF = 127.996, 0x8000 = -128.0) and
+# values whose products/sums cross them
+EDGE_SPLATS = (1.0, -1.0, 1 / isa.ONE, -1 / isa.ONE, 127.996, -128.0,
+               127.0, -127.0, 64.0, -64.0, 0.0)
+
+_jit_scan = jax.jit(interp.run_program_jax)
+_jit_pallas = jax.jit(
+    lambda words, w, qc, qa, rates, mod, noise: exec_ops.run_program_tiled(
+        words, w, qc, qa, rates, mod, noise, interpret=True))
+
+
+# ---------------------------------------------------------------------------
+# generators
+# ---------------------------------------------------------------------------
+
+def gen_program(rng: np.random.RandomState, max_len: int = 32) -> np.ndarray:
+    """One random *valid* program: bounded length, every opcode drawable,
+    random register/slot/shift operands, edge-value constants mixed in."""
+    a = Asm()
+    n = int(rng.randint(1, max_len + 1))
+    ops = rng.randint(0, isa.N_OPS, n)
+    for op in ops:
+        rd, ra, rb = (int(x) for x in rng.randint(0, isa.N_REGS, 3))
+        sh = int(rng.randint(0, 20))          # beyond the clamp on purpose
+        if op == isa.SPLAT:
+            if rng.rand() < 0.5:
+                val = float(EDGE_SPLATS[rng.randint(len(EDGE_SPLATS))])
+            else:
+                val = float(rng.uniform(-130, 130))
+            a.splat(rd, val)
+        elif op == isa.LDMOD:
+            a.ldmod(rd, int(rng.randint(0, 4)))   # incl. out-of-range slots
+        elif op == isa.STW:
+            a.stw(ra)
+        elif op in (isa.MOV,):
+            a.mov(rd, ra)
+        elif op in (isa.LDW, isa.LDCAUSAL, isa.LDACAUSAL, isa.LDRATE,
+                    isa.LDNOISE):
+            a._emit(op, rd)
+        elif op in (isa.SHL, isa.SHR):
+            a._emit(op, rd, ra, isa.alu_imm(0, sh))
+        elif op == isa.NOP:
+            a.nop()
+        else:                                 # 3-reg ALU (+ MULF shift)
+            a._emit(op, rd, ra, isa.alu_imm(rb, sh if op == isa.MULF else 0))
+    words = a.build()
+    isa.validate(words)                        # generator only emits valid
+    assert words.shape[0] <= PAD_LEN
+    return words
+
+
+def gen_operands(rng: np.random.RandomState, edge: bool = False) -> dict:
+    """Random operand planes; ``edge=True`` pins them to the saturation
+    corpus (weight rails 0/63, CADC rails 0/255, rate overflow, ±1 mod,
+    int16-rail noise)."""
+    if edge:
+        w_pool = np.array([0, 63, 1, 62], np.int32)
+        q_pool = np.array([0, 255, 1, 254], np.int32)
+        return dict(
+            weights=w_pool[rng.randint(0, 4, (R, C))],
+            qc=q_pool[rng.randint(0, 4, (R, C))],
+            qa=q_pool[rng.randint(0, 4, (R, C))],
+            rates=np.array([0.0, 1.0, 127.0, 1000.0] * (C // 4),
+                           np.float32)[:C],
+            mod=np.stack([np.full(C, isa.I16MAX, np.int32),
+                          np.full(C, isa.I16MIN, np.int32)]),
+            noise=np.where(rng.rand(R, C) < 0.5, isa.I16MAX,
+                           isa.I16MIN).astype(np.int32),
+        )
+    return dict(
+        weights=rng.randint(0, 64, (R, C)).astype(np.int32),
+        qc=rng.randint(0, 256, (R, C)).astype(np.int32),
+        qa=rng.randint(0, 256, (R, C)).astype(np.int32),
+        rates=rng.randint(0, 300, (C,)).astype(np.float32),
+        mod=isa.to_fixed(rng.uniform(-2, 2, (2, C))),
+        noise=isa.to_fixed(rng.uniform(-128, 128, (R, C))),
+    )
+
+
+def _pad(words: np.ndarray) -> np.ndarray:
+    """NOP-pad to the next multiple of PAD_LEN (NOP == all-zero word):
+    programs up to PAD_LEN share ONE jit cache entry; longer custom rules
+    (README's verify-your-rule flow) still work, one entry per bucket."""
+    n = max(PAD_LEN, -(-int(words.shape[0]) // PAD_LEN) * PAD_LEN)
+    out = np.zeros(n, np.int32)
+    out[:words.shape[0]] = words
+    return out
+
+
+def run_all_executors(words: np.ndarray, ops: dict) -> dict:
+    """Execute on all four executors; return {name: (wmem, regs)} as
+    numpy arrays."""
+    words = _pad(np.asarray(words, np.int32))
+    j = {k: jnp.asarray(v) for k, v in ops.items()}
+    args = (j["weights"], j["qc"], j["qa"], j["rates"], j["mod"], j["noise"])
+    out = {
+        "numpy": interp.run_program_np(
+            words, ops["weights"], ops["qc"], ops["qa"], ops["rates"],
+            ops["mod"], ops["noise"]),
+        "scan": _jit_scan(jnp.asarray(words), *args),
+        "specialized": specialize.run_program_specialized(words, *args),
+        "pallas": _jit_pallas(jnp.asarray(words), *args),
+    }
+    return {k: (np.asarray(w), np.asarray(r)) for k, (w, r) in out.items()}
+
+
+def assert_bit_identical(outs: dict, ctx: str = ""):
+    w_ref, r_ref = outs["numpy"]
+    for name, (w, r) in outs.items():
+        np.testing.assert_array_equal(
+            w, w_ref, err_msg=f"{name} weights diverge from numpy {ctx}")
+        np.testing.assert_array_equal(
+            r, r_ref, err_msg=f"{name} registers diverge from numpy {ctx}")
+
+
+# ---------------------------------------------------------------------------
+# the differential fuzz corpus (deterministic, >= 200 programs)
+# ---------------------------------------------------------------------------
+
+class TestDifferentialFuzz:
+    N_PROGRAMS = 200
+
+    def test_fuzz_corpus_bit_identical(self):
+        """>= 200 random valid programs x 4 executors, bit-identical."""
+        for seed in range(self.N_PROGRAMS):
+            rng = np.random.RandomState(seed)
+            words = gen_program(rng)
+            ops = gen_operands(rng, edge=(seed % 5 == 0))
+            assert_bit_identical(run_all_executors(words, ops),
+                                 ctx=f"(seed {seed})")
+
+    def test_corpus_reaches_every_opcode(self):
+        """The generator must be able to emit every opcode — otherwise
+        the fuzz corpus silently under-covers the ISA."""
+        seen = set()
+        for seed in range(self.N_PROGRAMS):
+            words = gen_program(np.random.RandomState(seed))
+            seen |= set(((np.asarray(words, np.int64) >> 26) & 0x3F)
+                        .tolist())
+        assert seen == set(range(isa.N_OPS)), \
+            f"missing opcodes {set(range(isa.N_OPS)) - seen}"
+
+    def test_edge_value_saturation_program(self):
+        """Explicit wrap-candidate program: every edge constant is
+        splatted, summed against itself (0x7FFF + anything must clamp,
+        not wrap), multiplied at shift 0 (max product magnitude), and
+        stored."""
+        a = Asm()
+        for i, v in enumerate((127.996, -128.0, 1.0, -1.0, 1 / isa.ONE)):
+            a.splat(i % isa.N_REGS, v)
+        a.add(0, 0, 0)             # I16MAX + I16MAX -> clamp
+        a.sub(1, 1, 0)             # I16MIN - I16MAX -> clamp
+        a.mulf(2, 0, 1, 0)         # huge product, shift 0 -> clamp
+        a.mulf(3, 4, 4, 16)        # tiny product, max shift -> 0 or ±1
+        a.shl(4, 0, 15)            # clamp via shift
+        a.ldw(5)
+        a.add(5, 5, 0)             # weight + I16MAX
+        a.stw(5)                   # must store 63, not wrap
+        for seed in (0, 1, 2):
+            ops = gen_operands(np.random.RandomState(seed), edge=True)
+            outs = run_all_executors(a.build(), ops)
+            assert_bit_identical(outs, ctx="(edge program)")
+            assert (outs["numpy"][0] == 63).all(), "store must saturate"
+
+    def test_edge_operand_planes(self):
+        """Shipped programs on the saturation operand corpus."""
+        from repro.ppuvm import programs
+        for builder in (lambda: programs.rstdp_program(eta=0.5),
+                        lambda: programs.stdp_program(),
+                        lambda: programs.homeostasis_program(
+                            target_rate=4.0)):
+            for seed in range(3):
+                ops = gen_operands(np.random.RandomState(seed), edge=True)
+                assert_bit_identical(
+                    run_all_executors(builder(), ops),
+                    ctx="(edge operands)")
+
+    def test_pallas_multi_tile_and_batched_prefix(self):
+        """The tile-VM paths the 8x8 corpus can't reach: a real multi-tile
+        grid (16x16 with rb=cb=8 -> 2x2 tiles, exercising every BlockSpec
+        index map) and an instance-prefix vmap fold (axis conventions:
+        mod at axis 1 in, regs prefix at axis 1 out)."""
+        for seed in range(8):
+            rng = np.random.RandomState(1000 + seed)
+            words = jnp.asarray(_pad(gen_program(rng)))
+            for shape in ((16, 16), (2, 16, 16)):
+                r, c = shape[-2:]
+                ops = dict(
+                    weights=rng.randint(0, 64, shape).astype(np.int32),
+                    qc=rng.randint(0, 256, shape).astype(np.int32),
+                    qa=rng.randint(0, 256, shape).astype(np.int32),
+                    rates=rng.randint(0, 300, (*shape[:-2], c)
+                                      ).astype(np.float32),
+                    mod=isa.to_fixed(rng.uniform(-2, 2, (2, *shape[:-2],
+                                                         c))),
+                    noise=isa.to_fixed(rng.uniform(-128, 128, shape)),
+                )
+                wn, rn = interp.run_program_np(np.asarray(words), **ops)
+                wp, rp = exec_ops.run_program_tiled(
+                    words, *(jnp.asarray(ops[k]) for k in
+                             ("weights", "qc", "qa", "rates", "mod",
+                              "noise")),
+                    rb=8, cb=8, interpret=True)
+                np.testing.assert_array_equal(np.asarray(wp), wn)
+                np.testing.assert_array_equal(np.asarray(rp), rn)
+
+    def test_fuzz_detects_semantic_divergence(self):
+        """Harness sanity: a deliberately perturbed result must FAIL the
+        bit-identity assertion (the diff harness can actually see)."""
+        rng = np.random.RandomState(0)
+        outs = run_all_executors(gen_program(rng), gen_operands(rng))
+        w, r = outs["scan"]
+        outs["scan"] = (w + (w == 0), r)      # flip at least one lane
+        with pytest.raises(AssertionError):
+            assert_bit_identical(outs)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis pass (CI tier-2; skipped when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           n_instr=st.integers(1, 32),
+           edge=st.booleans())
+    def test_fuzz_hypothesis(seed, n_instr, edge):
+        """Property: ANY generated valid program is bit-identical across
+        all four executors (hypothesis shrinks failures to a minimal
+        program)."""
+        rng = np.random.RandomState(seed)
+        words = gen_program(rng, max_len=n_instr)
+        ops = gen_operands(rng, edge=edge)
+        assert_bit_identical(run_all_executors(words, ops),
+                             ctx=f"(hypothesis seed {seed})")
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_fuzz_hypothesis():
+        pass

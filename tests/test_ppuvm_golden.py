@@ -1,0 +1,137 @@
+"""Golden playback-trace regression for the PPU-VM (ISSUE 3 satellite).
+
+Small canonical playback programs — R-STDP, STDP, and homeostasis rules
+uploaded via ``WRITE_PPU_PROGRAM`` and executed with ``PPU_RUN`` — have
+their full experiment traces checked in under ``tests/golden/``. The
+test re-runs both co-sim backends (and the fast backend under EVERY
+PPU-VM executor) against the stored traces, so an executor refactor
+cannot silently change integer semantics: a 1-LSB weight shift in any
+``PPU_W`` record is far outside the float tolerance and fails the diff.
+
+Regenerate after an *intentional* semantics change with:
+
+    PYTHONPATH=src python tests/test_ppuvm_golden.py --regen
+
+(and justify the diff in the PR — the goldens are the contract).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.bss2 import BSS2
+from repro.ppuvm import programs
+from repro.verif import playback as pb
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+EXECUTORS = ("scan", "specialized", "pallas_interpret")
+
+import dataclasses as _dc
+
+CFG = _dc.replace(BSS2.reduced(), n_rows=8, n_cols=8)
+
+RULES = {
+    "rstdp": lambda: programs.rstdp_program(eta=0.5),
+    "stdp": lambda: programs.stdp_program(eta_plus=0.8, eta_minus=0.9),
+    "homeostasis": lambda: programs.homeostasis_program(target_rate=4.0),
+}
+
+
+def canonical_program(rule: str):
+    """The canonical playback program for one rule: deterministic event
+    stream, two PPU_RUNs (one with a noise plane, one without), weight /
+    rate read-backs in between."""
+    words = RULES[rule]()
+    rng = np.random.RandomState(17)
+    r, c = CFG.n_rows, CFG.n_cols
+    w = np.full((r, c), 50, np.int8)
+    addr = np.zeros((r, c), np.int8)
+    ev = np.zeros((100, r), np.float32)
+    ev[10] = 1.0
+    ev[55] = 1.0
+    ev[80, ::2] = 1.0
+    mod = rng.uniform(-1, 1, (2, c)).astype(np.float32)
+    noise = (0.3 * rng.randn(r, c)).astype(np.float32)
+    return [
+        pb.write_weights(w),
+        pb.write_addresses(addr),
+        pb.write_ppu_program(words),
+        pb.inject(ev),
+        pb.ppu_run(mod=mod, noise=noise),
+        pb.read_weights(),
+        pb.run(40),
+        pb.ppu_run(mod=mod),
+        pb.read_weights(),
+        pb.read_rates(),
+    ]
+
+
+def golden_path(rule: str) -> str:
+    return os.path.join(GOLDEN_DIR, f"playback_{rule}.npz")
+
+
+def save_trace(path: str, trace) -> None:
+    payload = {"n": np.int64(len(trace))}
+    for i, (t, kind, val) in enumerate(trace):
+        payload[f"t_{i}"] = np.int64(t)
+        payload[f"kind_{i}"] = np.str_(kind)
+        payload[f"val_{i}"] = np.asarray(val)
+    np.savez_compressed(path, **payload)
+
+
+def load_trace(path: str):
+    with np.load(path) as z:
+        n = int(z["n"])
+        return [(int(z[f"t_{i}"]), str(z[f"kind_{i}"]), z[f"val_{i}"])
+                for i in range(n)]
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+class TestGoldenTraces:
+    def test_ref_backend_matches_golden(self, rule):
+        """The independent NumPy backend must reproduce the checked-in
+        trace — the golden is the frozen integer-semantics contract."""
+        golden = load_trace(golden_path(rule))
+        tr = pb.execute(canonical_program(rule), "ref", CFG)
+        errs = pb.compare_traces(tr, golden, atol=0.05)
+        assert not errs, "\n".join(errs)
+
+    def test_fast_backend_all_executors_match_golden(self, rule):
+        """Every fast-backend executor must reproduce the golden trace:
+        executor refactors cannot silently change what PPU_RUN writes."""
+        golden = load_trace(golden_path(rule))
+        for ex in EXECUTORS:
+            tr = pb.execute(canonical_program(rule), "fast", CFG,
+                            ppu_executor=ex)
+            errs = pb.compare_traces(tr, golden, atol=0.05)
+            assert not errs, f"executor={ex}\n" + "\n".join(errs)
+
+    def test_golden_ppu_weights_are_integer_exact(self, rule):
+        """PPU_W records are integers: both backends must match the
+        golden BIT-exactly there (the float atol only covers analog
+        observables)."""
+        golden = load_trace(golden_path(rule))
+        for be, kw in (("ref", {}), ("fast", {"ppu_executor": "auto"})):
+            tr = pb.execute(canonical_program(rule), be, CFG, **kw)
+            for (tg, kg, vg), (t, k, v) in zip(golden, tr):
+                if kg in ("PPU_W", "WEIGHTS"):
+                    np.testing.assert_array_equal(
+                        v.astype(np.int32), vg.astype(np.int32),
+                        err_msg=f"{be}: {kg}@{tg} not bit-equal to golden")
+
+
+def regenerate() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for rule in sorted(RULES):
+        trace = pb.execute(canonical_program(rule), "ref", CFG)
+        save_trace(golden_path(rule), trace)
+        kinds = ",".join(k for _, k, _ in trace)
+        print(f"wrote {golden_path(rule)}  ({kinds})")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        regenerate()
+    else:
+        print(__doc__)
