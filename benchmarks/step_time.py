@@ -13,6 +13,11 @@ We measure the same ladder on the machine model, slowest to fastest:
             window, whole-trial synray matmul, neuron-only dt scan)
   scan      the whole experiment as ONE jitted lax.scan over trials —
             no host dispatch at all, §5's "everything on device"
+  blocked   the scan with AnnCore(backend="blocked"): the remaining
+            per-dt neuron loop replaced by the time-blocked window
+            (repro.kernels.neuron_scan) — on TPU the Pallas kernel keeps
+            the state VMEM-resident for the whole trial; on CPU the
+            packed-carry block scan amortizes the XLA while-loop cost
 
 Absolute times are CPU-container artifacts; the RATIOS are the
 architecture.
@@ -23,7 +28,7 @@ import jax
 import numpy as np
 
 
-REPEATS = 4   # best-of repeats: CPU container timings are noisy
+REPEATS = 8   # best-of repeats: CPU container timings are noisy
 
 
 def _bench_loop(trial_jit, state0, stims, n_trials):
@@ -45,23 +50,39 @@ def run(n_trials: int = 60):
     from repro.core.hybrid import (host_loop_trial, make_experiment,
                                    make_scanned_training)
 
-    init, trial, meta = make_experiment()                    # fused backend
+    init, trial, meta = make_experiment(backend="fused")
     init_o, trial_o, _ = make_experiment(backend="oracle")   # seed hot path
+    init_b, _, meta_b = make_experiment(backend="blocked")
     state0 = init(jax.random.PRNGKey(0))
     stims_np = np.resize([1, 2, 0], n_trials).astype(np.int32)
     stims = [jnp.int32(int(s)) for s in stims_np]
     stims_arr = jnp.asarray(stims_np)
 
-    # --- scan: whole experiment, one jitted program ---------------------
-    scanned = make_scanned_training(meta["scanned_training"])
-    s, _ = scanned(init(jax.random.PRNGKey(0)), stims_arr)  # warmup/compile
-    jax.block_until_ready(s)
-    scan_t = float("inf")
+    # --- scan rungs: whole experiment, one jitted program. The fused and
+    # blocked programs are measured INTERLEAVED (alternating reps) so the
+    # blocked-vs-scan ratio sees identical machine weather — sequential
+    # best-of lets one rung catch a quiet slice of a shared container and
+    # skews the ratio either way.
+    runs = [(make_scanned_training(meta["scanned_training"]), init),
+            (make_scanned_training(meta_b["scanned_training"]), init_b)]
+    for scanned, init_fn in runs:                       # warmup/compile
+        s, _ = scanned(init_fn(jax.random.PRNGKey(0)), stims_arr)
+        jax.block_until_ready(s)
+    samples = [[], []]
     for _ in range(REPEATS):
-        t0 = time.perf_counter()
-        s, hist = scanned(init(jax.random.PRNGKey(0)), stims_arr)
-        jax.block_until_ready((s, hist))
-        scan_t = min(scan_t, (time.perf_counter() - t0) / n_trials)
+        for i, (scanned, init_fn) in enumerate(runs):
+            t0 = time.perf_counter()
+            s, hist = scanned(init_fn(jax.random.PRNGKey(0)), stims_arr)
+            jax.block_until_ready((s, hist))
+            samples[i].append((time.perf_counter() - t0) / n_trials)
+    scan_t, blocked_t = min(samples[0]), min(samples[1])
+    # best-of favors whichever rung catches the quietest slice of a shared
+    # container (the fused scan's runtime varies ~25%, the blocked one
+    # ~10%, so best-of systematically understates the gap). The PAIRED
+    # ratio — each rep's two programs run back-to-back in the same machine
+    # window — cancels that drift; its median is the robust speedup.
+    paired = sorted(f / b for f, b in zip(*samples))
+    blocked_speedup_paired = paired[len(paired) // 2]
 
     # --- per-trial dispatch, fused and oracle backends ------------------
     dispatch_t = _bench_loop(jax.jit(trial), state0, stims, n_trials)
@@ -78,10 +99,15 @@ def run(n_trials: int = 60):
 
     emu_us = 256 * 0.2  # emulated hardware time per trial (model time)
     print("# §5 timing — one-program scan vs dispatch vs host loop")
+    print(f"blocked  (time-blocked scan)  : {blocked_t*1e6:9.0f} us/trial")
     print(f"scan     (one jitted program) : {scan_t*1e6:9.0f} us/trial")
     print(f"dispatch (fused trial)        : {dispatch_t*1e6:9.0f} us/trial")
     print(f"dispatch (oracle trial, seed) : {oracle_t*1e6:9.0f} us/trial")
     print(f"host-in-the-loop              : {host_t*1e6:9.0f} us/trial")
+    print(f"blocked vs scan       : {blocked_speedup_paired:5.2f}x "
+          f"paired-median ({scan_t/blocked_t:.2f}x best-of; target 1.5x — "
+          f"the isolated neuron phase is a steady 1.55x; see README for "
+          f"the shared-container noise band)")
     print(f"scan vs seed dispatch : {oracle_t/scan_t:5.1f}x "
           f"(acceptance floor: 3x)")
     print(f"scan vs fused dispatch: {dispatch_t/scan_t:5.1f}x "
@@ -91,6 +117,7 @@ def run(n_trials: int = 60):
           f"290 us/step once eliminated)")
     print(f"(emulated model time per trial: {emu_us:.0f} us)")
     return dict(name="step_time",
+                blocked_us=blocked_t * 1e6,
                 scan_us=scan_t * 1e6,
                 # fused_us keeps the seed's meaning (one jitted trial,
                 # dispatched per trial) so the bench trajectory stays
@@ -99,6 +126,8 @@ def run(n_trials: int = 60):
                 dispatch_us=dispatch_t * 1e6,
                 oracle_dispatch_us=oracle_t * 1e6,
                 host_us=host_t * 1e6,
+                speedup_blocked_vs_scan=scan_t / blocked_t,
+                speedup_blocked_vs_scan_paired=blocked_speedup_paired,
                 speedup_scan_vs_seed_dispatch=oracle_t / scan_t,
                 speedup_scan_vs_fused_dispatch=dispatch_t / scan_t,
                 speedup_vs_host=host_t / scan_t)

@@ -50,49 +50,72 @@ def decay_factors(params: Dict, dt: float) -> Dict:
                 aw=jnp.exp(-dt / params["tau_w"]))
 
 
-def step(state: NeuronState, i_syn_exc, i_syn_inh, params: Dict, dt: float,
-         adex: bool = True, decays: Dict = None):
-    """One dt step. i_syn_*: charge injected this step [pA*us / us = pA].
+def integrate_currents(i_exc, i_inh, i_syn_exc, i_syn_inh, decays: Dict):
+    """One dt of the synaptic-current states: exponential kernels, pulses
+    add instantaneously. This recurrence is independent of the membrane
+    state, so the blocked backend hoists it into a cheap window-wide scan
+    (``repro.kernels.neuron_scan``) — the op tree per step is identical to
+    the inline computation ``step`` used to do, keeping results bit-exact.
+    """
+    return (i_exc * decays["de"] + i_syn_exc,
+            i_inh * decays["di"] + i_syn_inh)
 
-    Returns (new_state, spikes[...,N] float32 in {0,1}).
+
+def membrane_step(v, w, refrac, i_drive, params: Dict, dt: float,
+                  adex: bool = True, decays: Dict = None):
+    """The sequential membrane core of one dt step.
+
+    ``i_drive`` is the already-integrated net synaptic current
+    ``i_exc - i_inh`` (see ``integrate_currents``). Returns
+    ``(v, w, refrac, spikes_f32)`` — the op trees are exactly the ones
+    ``step`` always computed, so every caller (oracle scan, blocked ref,
+    Pallas neuron_scan kernel) produces bit-identical trajectories.
     """
     g_l = params["g_leak"]
-    if decays is None:
-        decays = decay_factors(params, dt)
-
-    # synaptic currents: exponential kernels, pulses add instantaneously
-    i_exc = state.i_exc * decays["de"] + i_syn_exc
-    i_inh = state.i_inh * decays["di"] + i_syn_inh
-
-    i_total = i_exc - i_inh - state.w
+    i_total = i_drive - w
 
     # exponential escape current (clamped like the saturating circuit)
     if adex:
-        arg = jnp.clip((state.v - params["v_thres"]) / params["delta_t"],
+        arg = jnp.clip((v - params["v_thres"]) / params["delta_t"],
                        -20.0, 3.0)
         i_exp = g_l * params["delta_t"] * jnp.exp(arg)
     else:
         i_exp = 0.0
 
     v_inf = params["e_leak"] + (i_total + i_exp) / g_l
-    v = v_inf + (state.v - v_inf) * decays["alpha"]
+    v_new = v_inf + (v - v_inf) * decays["alpha"]
 
     # adaptation (exponential Euler towards a(V - E_L))
-    w_inf = params["a"] * (state.v - params["e_leak"])
-    w = w_inf + (state.w - w_inf) * decays["aw"]
+    w_inf = params["a"] * (v - params["e_leak"])
+    w_new = w_inf + (w - w_inf) * decays["aw"]
 
     # refractory clamp
-    in_refrac = state.refrac > 0.0
-    v = jnp.where(in_refrac, params["e_reset"], v)
-    w = jnp.where(in_refrac, state.w, w)
+    in_refrac = refrac > 0.0
+    v_new = jnp.where(in_refrac, params["e_reset"], v_new)
+    w_new = jnp.where(in_refrac, w, w_new)
 
     # spike detection: threshold crossing ends the integration step
     spike_v = params["v_thres"] + jnp.where(adex, 2.0 * params["delta_t"], 0.0)
-    spikes = (v > spike_v) & ~in_refrac
-    v = jnp.where(spikes, params["e_reset"], v)
-    w = jnp.where(spikes, w + params["b"], w)
+    spikes = (v_new > spike_v) & ~in_refrac
+    v_new = jnp.where(spikes, params["e_reset"], v_new)
+    w_new = jnp.where(spikes, w_new + params["b"], w_new)
     refrac = jnp.where(spikes, params["tau_refrac"],
-                       jnp.maximum(state.refrac - dt, 0.0))
+                       jnp.maximum(refrac - dt, 0.0))
+    return v_new, w_new, refrac, spikes.astype(jnp.float32)
 
+
+def step(state: NeuronState, i_syn_exc, i_syn_inh, params: Dict, dt: float,
+         adex: bool = True, decays: Dict = None):
+    """One dt step. i_syn_*: charge injected this step [pA*us / us = pA].
+
+    Returns (new_state, spikes[...,N] float32 in {0,1}).
+    """
+    if decays is None:
+        decays = decay_factors(params, dt)
+    i_exc, i_inh = integrate_currents(state.i_exc, state.i_inh,
+                                      i_syn_exc, i_syn_inh, decays)
+    v, w, refrac, spikes = membrane_step(
+        state.v, state.w, state.refrac, i_exc - i_inh, params, dt,
+        adex=adex, decays=decays)
     new = NeuronState(v=v, w=w, i_exc=i_exc, i_inh=i_inh, refrac=refrac)
-    return new, spikes.astype(jnp.float32)
+    return new, spikes

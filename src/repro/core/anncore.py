@@ -19,7 +19,7 @@ argument (auto-selected like ``repro.kernels/*/ops.py`` selects its impl):
     accumulators, and strided-slices the Dale rows. Ground truth for
     equivalence tests and the host-style baseline.
 
-``fused`` (the ``auto`` default)
+``fused`` (the ``auto`` default on CPU)
     The hot path. Exploits two structural facts of the machine:
     (1) STP efficacy depends only on the *input* events, so the whole
     efficacy trajectory is precomputed by a cheap [.., R]-wide scan;
@@ -31,6 +31,17 @@ argument (auto-selected like ``repro.kernels/*/ops.py`` selects its impl):
     feeds back into neuron dynamics within a trial — is hoisted out of the
     scan entirely and applied once per window by the fused
     ``correlation_window`` kernel (T x fewer HBM round trips).
+
+``blocked`` (the ``auto`` default on TPU)
+    ``fused`` with the last per-dt scan replaced by the time-blocked
+    neuron window (``repro.kernels.neuron_scan``): the neuron state
+    integrates a whole time block per step — VMEM-resident in the Pallas
+    kernel on TPU (no XLA while loop over dts at all, instances on the
+    kernel grid), a packed-carry scan over blocks on CPU. Bit-identical
+    spikes/records to the oracle: the per-step op trees are shared
+    (``adex.integrate_currents``/``membrane_step``), only their schedule
+    changes. ``block_size`` tunes the CPU block (default 8, measured on
+    the CPU container); ``kernel_block`` the TPU kernel's time block.
 
 ``kernel_impl`` forwards to the kernel wrappers: ``auto`` (pallas on TPU,
 jnp oracle elsewhere), ``pallas``, ``interpret``, or ``ref``.
@@ -64,26 +75,37 @@ class AnnCore:
       stp_calib:     [..., R]   4-bit trim codes
       cadc_offset/cadc_gain: [..., C]
 
-    ``backend``: "auto" | "oracle" | "fused" (see module docstring).
+    ``backend``: "auto" | "oracle" | "fused" | "blocked" (see module
+    docstring; "auto" resolves to "blocked" on TPU — the whole-trial
+    on-chip path — and "fused" elsewhere).
     ``kernel_impl``: impl forwarded to the Pallas kernel wrappers.
     ``const_addr``: promise that within any one ``run`` window the event
     address on each row never changes (each driver row carries a single
     source, as in the §5 experiment wiring). Lets the fused CPU path
     resolve the address-match mask once per window into an effective
     weight matrix instead of re-deriving it per step.
+    ``block_size``/``trace_block``/``kernel_block``: time-block sizes of
+    the "blocked" backend (membrane scan slab, current-trace slab, and
+    the Pallas kernel's VMEM-resident block).
     """
 
     def __init__(self, cfg: BSS2Config, inst: Dict, backend: str = "auto",
-                 kernel_impl: str = "auto", const_addr: bool = False):
+                 kernel_impl: str = "auto", const_addr: bool = False,
+                 block_size: int = 8, trace_block: int = 8,
+                 kernel_block: int = 32):
         self.cfg = cfg
         self.inst = inst
         if backend == "auto":
-            backend = "fused"
-        if backend not in ("oracle", "fused"):
+            backend = ("blocked" if jax.default_backend() == "tpu"
+                       else "fused")
+        if backend not in ("oracle", "fused", "blocked"):
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
         self.kernel_impl = kernel_impl
         self.const_addr = const_addr
+        self.block_size = block_size
+        self.trace_block = trace_block
+        self.kernel_block = kernel_block
 
     def init_state(self, prefix=()) -> AnnCoreState:
         cfg = self.cfg
@@ -151,6 +173,9 @@ class AnnCore:
         if self.backend == "oracle":
             return self._run_oracle(state, row_spikes_t, row_addr_t,
                                     record_v=record_v, unroll=unroll or 1)
+        if self.backend == "blocked":
+            return self._run_blocked(state, row_spikes_t, row_addr_t,
+                                     record_v=record_v, unroll=unroll or 4)
         return self._run_fused(state, row_spikes_t, row_addr_t,
                                record_v=record_v, unroll=unroll or 4)
 
@@ -169,21 +194,27 @@ class AnnCore:
             out["v"] = recs[1]
         return state, out
 
-    def _run_fused(self, state: AnnCoreState, row_spikes_t, row_addr_t,
-                   record_v: bool = False, unroll: int = 1):
+    def _window_currents(self, state: AnnCoreState, row_spikes_t,
+                         row_addr_t, unroll: int):
+        """Phases 1+2 shared by the fused and blocked backends: the STP
+        efficacy trajectory (a cheap [.., R]-wide scan) and the whole
+        window's synaptic currents as ONE time-batched event x weight
+        matmul with the Dale rows pre-split."""
         cfg = self.cfg
         dt = cfg.dt
         inst = self.inst
 
         # 1. STP efficacy trajectory: depends only on the input events, so
         #    the whole [T, .., R] trajectory comes out of a cheap scan that
-        #    never touches the [.., R, C] synapse array.
+        #    never touches the [.., R, C] synapse array. The calibrated
+        #    mismatch scale and the recovery increment are loop-invariant
+        #    (bit-exact hoists — same op trees).
+        scale = stp.efficacy_scale(inst["stp_offset"], inst["stp_calib"])
+        recovery = stp.recovery_factor(cfg.stp_tau_rec, dt)
+
         def stp_body(s, sp):
-            eff = stp.efficacy(s, sp, u=cfg.stp_u,
-                               offset=inst["stp_offset"],
-                               calib_code=inst["stp_calib"])
-            return stp.update(s, sp, u=cfg.stp_u,
-                              tau_rec=cfg.stp_tau_rec, dt=dt), eff
+            eff = stp.efficacy(s, sp, u=cfg.stp_u, scale=scale)
+            return stp.update(s, sp, u=cfg.stp_u, recovery=recovery), eff
 
         new_stp, eff_t = jax.lax.scan(stp_body, state.stp, row_spikes_t,
                                       unroll=unroll)
@@ -202,8 +233,54 @@ class AnnCore:
             eff_t[..., 1::2], row_addr_t[..., 1::2], gain,
             impl=self.kernel_impl, const_addr=self.const_addr)
         # current scaling vectorized over the whole window, not per step
-        i_exc_t = i_exc_t * 60.0
-        i_inh_t = i_inh_t * 60.0
+        return new_stp, i_exc_t * 60.0, i_inh_t * 60.0
+
+    def _finish_window(self, state, new_stp, new_neuron, rate_counters,
+                       row_spikes_t, recs, record_v):
+        """Phase 4 shared by fused/blocked: correlation hoisted out of the
+        scan — sensors never feed back into the dynamics within a window,
+        so one fused kernel call replays the whole T-window per VMEM
+        tile."""
+        cfg = self.cfg
+        out_spikes_t = recs[0]
+        new_corr = correlation.window(
+            state.corr, row_spikes_t, out_spikes_t,
+            tau_pre=cfg.neuron.tau_syn_exc, tau_post=cfg.neuron.tau_syn_exc,
+            dt=cfg.dt, impl=self.kernel_impl)
+        new_state = AnnCoreState(neuron=new_neuron, stp=new_stp,
+                                 corr=new_corr, syn=state.syn,
+                                 rate_counters=rate_counters)
+        out = dict(spikes=out_spikes_t)
+        if record_v:
+            out["v"] = recs[1]
+        return new_state, out
+
+    def _run_blocked(self, state: AnnCoreState, row_spikes_t, row_addr_t,
+                     record_v: bool = False, unroll: int = 1):
+        from repro.kernels.neuron_scan import ops as neuron_ops
+        new_stp, i_exc_t, i_inh_t = self._window_currents(
+            state, row_spikes_t, row_addr_t, unroll)
+
+        # 3. Time-blocked neuron window instead of the per-dt scan: the
+        #    state advances a whole block per step (VMEM-resident in the
+        #    Pallas kernel, packed-carry block scan on CPU).
+        new_neuron, rate_counters, recs = neuron_ops.neuron_window(
+            state.neuron, state.rate_counters, i_exc_t, i_inh_t,
+            self.inst["neuron_params"], dt=self.cfg.dt,
+            use_adex=self.cfg.neuron.adex, impl=self.kernel_impl,
+            block=self.block_size, trace_block=self.trace_block,
+            kernel_block=self.kernel_block, record_v=record_v)
+        return self._finish_window(state, new_stp, new_neuron,
+                                   rate_counters, row_spikes_t, recs,
+                                   record_v)
+
+    def _run_fused(self, state: AnnCoreState, row_spikes_t, row_addr_t,
+                   record_v: bool = False, unroll: int = 1):
+        cfg = self.cfg
+        dt = cfg.dt
+        inst = self.inst
+        new_stp, i_exc_t, i_inh_t = self._window_currents(
+            state, row_spikes_t, row_addr_t, unroll)
 
         # 3. The remaining dt scan is neuron-only: O(C) per step; the
         #    time-invariant decay factors are hoisted out of the loop.
@@ -220,20 +297,6 @@ class AnnCore:
         (new_neuron, rate_counters), recs = jax.lax.scan(
             body, (state.neuron, state.rate_counters), (i_exc_t, i_inh_t),
             unroll=unroll)
-        out_spikes_t = recs[0]
-
-        # 4. Correlation hoisted out of the scan: sensors never feed back
-        #    into the dynamics within a window, so one fused kernel call
-        #    replays the whole T-window per VMEM tile.
-        new_corr = correlation.window(
-            state.corr, row_spikes_t, out_spikes_t,
-            tau_pre=cfg.neuron.tau_syn_exc, tau_post=cfg.neuron.tau_syn_exc,
-            dt=dt, impl=self.kernel_impl)
-
-        new_state = AnnCoreState(neuron=new_neuron, stp=new_stp,
-                                 corr=new_corr, syn=syn,
-                                 rate_counters=rate_counters)
-        out = dict(spikes=out_spikes_t)
-        if record_v:
-            out["v"] = recs[1]
-        return new_state, out
+        return self._finish_window(state, new_stp, new_neuron,
+                                   rate_counters, row_spikes_t, recs,
+                                   record_v)

@@ -74,7 +74,8 @@ def window(state: CorrelationState, pre_t, post_t, *, tau_pre: float,
     difference vs the per-step oracle is float reduction order (~1 ulp).
 
     pre_t: [T, ..., R]; post_t: [T, ..., C]. A leading instance prefix on
-    the state is folded by nested vmap for the kernel path.
+    the state maps onto the kernel's instance grid axis (one launch for
+    the whole fleet — see ``repro.kernels``).
     """
     kernel_ok = (tau_pre == tau_post) and eta == 1.0
     if impl in ("pallas", "interpret") and not kernel_ok:
@@ -86,16 +87,9 @@ def window(state: CorrelationState, pre_t, post_t, *, tau_pre: float,
     if impl != "ref" and kernel_ok:
         from repro.kernels.corr import ops as corr_ops
         lam = math.exp(-dt / tau_pre)
-
-        def fn(p, q, tp, tq, ac, aa):
-            return corr_ops.correlation_window(p, q, tp, tq, ac, aa,
-                                               lam=lam, sat=sat, impl=impl)
-
-        for _ in range(state.a_causal.ndim - 2):
-            fn = jax.vmap(fn, in_axes=(1, 1, 0, 0, 0, 0), out_axes=0)
-        ac, aa, tp, tq = fn(pre_t, post_t, state.trace_pre,
-                            state.trace_post, state.a_causal,
-                            state.a_acausal)
+        ac, aa, tp, tq = corr_ops.correlation_window(
+            pre_t, post_t, state.trace_pre, state.trace_post,
+            state.a_causal, state.a_acausal, lam=lam, sat=sat, impl=impl)
         return CorrelationState(trace_pre=tp, trace_post=tq,
                                 a_causal=ac, a_acausal=aa)
 

@@ -76,7 +76,8 @@ def _patterns(ecfg: RSTDPConfig) -> Tuple[np.ndarray, np.ndarray]:
 def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                     instance_key=None, prefix=(), backend: str = "auto",
                     kernel_impl: str = "auto", rule_impl: str = "python",
-                    vm_executor: str = "auto"):
+                    vm_executor: str = "auto", block_size: int = None,
+                    trace_block: int = None, kernel_block: int = None):
     """Build the experiment closure set. Returns (init_fn, trial_fn, meta).
 
     The machine uses 2 rows per input (exc/inh pair, Dale's law: the PPU
@@ -84,8 +85,13 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
 
     ``backend``/``kernel_impl`` select the AnnCore emulation path (see
     repro.core.anncore): "auto" runs the fused hot path — correlation
-    hoisted out of the dt scan, whole-trial synray matmul — with "oracle"
-    kept as the per-step ground truth.
+    hoisted out of the dt scan, whole-trial synray matmul ("blocked" adds
+    the time-blocked neuron window and is the auto pick on TPU) — with
+    "oracle" kept as the per-step ground truth. ``block_size`` /
+    ``trace_block`` / ``kernel_block`` override the blocked backend's
+    time-block lengths (CPU membrane slab, current-trace slab, TPU
+    kernel block; whole-experiment scans compose with any block size —
+    T need not divide).
 
     ``rule_impl`` selects how the §5 learning rule executes:
       "python"  the rule is the ``_signed_rule`` Python callable (default);
@@ -120,8 +126,11 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     # const_addr: every driver row carries exactly one source here (input i
     # -> rows 2i/2i+1, address 0 throughout), so the fused path may resolve
     # the address-match mask once per trial
+    block_kw = {k: v for k, v in dict(
+        block_size=block_size, trace_block=trace_block,
+        kernel_block=kernel_block).items() if v is not None}
     core = AnnCore(cfg, inst, backend=backend, kernel_impl=kernel_impl,
-                   const_addr=True)
+                   const_addr=True, **block_kw)
     ppu = VectorUnit(cfg, inst)
 
     def init(key) -> ExperimentState:
@@ -310,7 +319,9 @@ def make_scanned_training(scanned_training):
 def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                  seed: int = 0, cfg: BSS2Config = None, fused: bool = True,
                  scan: bool = None, backend: str = "auto",
-                 rule_impl: str = "python", vm_executor: str = "auto"):
+                 rule_impl: str = "python", vm_executor: str = "auto",
+                 block_size: int = None, trace_block: int = None,
+                 kernel_block: int = None):
     """Full §5 experiment. Returns the metrics history (stacked).
 
     Modes:
@@ -323,7 +334,10 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
     init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg,
                                         instance_key=jax.random.PRNGKey(seed),
                                         backend=backend, rule_impl=rule_impl,
-                                        vm_executor=vm_executor)
+                                        vm_executor=vm_executor,
+                                        block_size=block_size,
+                                        trace_block=trace_block,
+                                        kernel_block=kernel_block)
     state = init(jax.random.PRNGKey(seed + 1))
     stims = jnp.asarray(np.resize([1, 2, 0], n_trials), jnp.int32)
     if scan is None:
@@ -380,10 +394,12 @@ def lower_bss2_cell(shape, ctx, mesh_cfg):
     cfg = BSS2  # full-size: 256 rows x 512 cols
     ecfg = RSTDPConfig(n_inputs=cfg.n_rows // 2, n_neurons=cfg.n_cols,
                        pattern_size=24, trial_steps=128)
-    # the lowered cell is the FUSED hot path: whole-trial synray matmul +
-    # hoisted correlation window, i.e. what production would run on TPU
+    # the lowered cell is the production hot path ("auto" = the blocked
+    # time-window backend on TPU, fused elsewhere): whole-trial synray
+    # matmul + hoisted correlation window + time-blocked neuron scan, all
+    # with the instance fleet on the kernels' instance grid axis
     init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg, prefix=(n_inst,),
-                                        backend="fused")
+                                        backend="auto")
 
     def batched_trial(state, stim):
         return trial(state, stim)
@@ -393,12 +409,14 @@ def lower_bss2_cell(shape, ctx, mesh_cfg):
 
     def spec_for(path_leaf):
         # instances (leading dim n_inst) over data axes; trailing synapse
-        # col dim over model where divisible
+        # col dim over model where divisible — the INSTANCE rule is the
+        # mesh-side twin of the kernels' instance grid axis
         shp = path_leaf.shape
-        parts = [None] * len(shp)
-        data_ax = tuple(mesh_cfg.data_axes)
         if len(shp) >= 1 and shp[0] == n_inst:
-            parts[0] = data_ax
+            sh = ctx.instance_sharding(shp, cols=cfg.n_cols)
+            if sh is not None:
+                return sh
+        parts = [None] * len(shp)
         if len(shp) >= 1 and shp[-1] == cfg.n_cols:
             parts[-1] = "model"
         return NamedSharding(mesh, P(*parts))

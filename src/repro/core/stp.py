@@ -34,20 +34,40 @@ CALIB_BITS = 4
 CALIB_STEP = 0.1
 
 
-def efficacy(state: STPState, spikes, *, u: float, offset, calib_code):
+def efficacy_scale(offset, calib_code):
+    """The loop-invariant per-row factor of ``efficacy`` (the calibrated
+    mismatch term). Precompute once per window and pass as ``scale`` —
+    the op tree stays the one ``efficacy`` always computed, so hoisting
+    it out of dt scans is bit-exact."""
+    trim = (calib_code.astype(jnp.float32) - 2 ** (CALIB_BITS - 1)) * CALIB_STEP
+    return 1.0 + offset - trim
+
+
+def efficacy(state: STPState, spikes, *, u: float, offset=None,
+             calib_code=None, scale=None):
     """Efficacy of this step's events (0 where no spike).
 
     offset: mismatch-induced efficacy offset per row (the Fig.-4 quantity);
     calib_code: int 4-bit trim, efficacy_corr = offset - (code - 8) * step.
+    ``scale`` may be passed instead (``efficacy_scale``, hoisted).
     """
-    trim = (calib_code.astype(jnp.float32) - 2 ** (CALIB_BITS - 1)) * CALIB_STEP
-    eff = u * state.r * (1.0 + offset - trim)
+    if scale is None:
+        scale = efficacy_scale(offset, calib_code)
+    eff = u * state.r * scale
     return jnp.clip(eff, 0.0, 1.5) * spikes
 
 
-def update(state: STPState, spikes, *, u: float, tau_rec: float, dt: float
-           ) -> STPState:
+def recovery_factor(tau_rec: float, dt: float):
+    """The loop-invariant recovery increment of ``update`` (hoistable like
+    ``efficacy_scale``)."""
+    return 1.0 - jnp.exp(-dt / tau_rec)
+
+
+def update(state: STPState, spikes, *, u: float, tau_rec: float = None,
+           dt: float = None, recovery=None) -> STPState:
     """Resource dynamics: use on spike, recover with tau_rec."""
-    r = state.r + (1.0 - state.r) * (1.0 - jnp.exp(-dt / tau_rec))
+    if recovery is None:
+        recovery = recovery_factor(tau_rec, dt)
+    r = state.r + (1.0 - state.r) * recovery
     r = r - u * r * spikes
     return STPState(r=jnp.clip(r, 0.0, 1.0))

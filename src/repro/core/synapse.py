@@ -55,8 +55,9 @@ def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
     time becomes the batch axis of the ``repro.kernels.synray`` Pallas
     kernel (address matching stays in-kernel, so per-step event addresses
     remain fully general). On CPU the broadcasting jnp oracle runs instead.
-    A leading instance prefix on ``weights`` is folded by nested vmap for
-    the kernel path; the oracle broadcasts natively.
+    A leading instance prefix on ``weights`` maps onto the kernel's
+    instance grid axis (one launch for the whole fleet — see
+    ``repro.kernels``); the oracle broadcasts natively.
 
     ``const_addr=True`` asserts the event address on each row is the same
     at every step of the window (true whenever each driver row carries a
@@ -71,26 +72,29 @@ def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
             match = (addresses == event_addr_t[0][..., None]
                      ).astype(jnp.float32)
             w_eff = weights.astype(jnp.float32) * match
-            i = jnp.einsum("t...r,...rc->t...c",
-                           row_events_t.astype(jnp.float32), w_eff)
+            if weights.ndim == 2:     # no instance prefix: plain matmul
+                i = row_events_t.astype(jnp.float32) @ w_eff
+            else:
+                i = jnp.einsum("t...r,...rc->t...c",
+                               row_events_t.astype(jnp.float32), w_eff)
             return i * gain
         return synaptic_current(weights, addresses, row_events_t,
                                 event_addr_t, gain)
+    from repro.kernels import (fold_instance, fold_instance_time,
+                               unfold_instance_time)
     from repro.kernels.synray import ops as synray_ops
 
     # time is the kernel's batch axis; pick the largest batch block that
     # divides the (static) window length
     T = row_events_t.shape[0]
     bb = next(d for d in (8, 4, 2, 1) if T % d == 0)
-
-    def fn(ev, ea, w, a):
-        return synray_ops.synaptic_current(ev, ea, w, a, impl=impl, bb=bb)
-
-    for _ in range(weights.ndim - 2):       # peel one instance dim per vmap
-        fn = jax.vmap(fn, in_axes=(1, 1, 0, 0), out_axes=1)
-    i = fn(row_events_t.astype(jnp.float32), event_addr_t,
-           weights, addresses)
-    return i * gain
+    prefix = weights.shape[:-2]
+    i = synray_ops.synaptic_current(
+        fold_instance_time(row_events_t.astype(jnp.float32), 1),
+        fold_instance_time(event_addr_t, 1),
+        fold_instance(weights, 2), fold_instance(addresses, 2),
+        impl=impl, bb=bb)
+    return unfold_instance_time(i, prefix) * gain
 
 
 def quantize_weight(w_float):

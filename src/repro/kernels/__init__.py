@@ -29,5 +29,49 @@ trial), batches the whole trial's synaptic currents through ``synray``
 standard R-STDP write-back through ``ppu_update`` (the §5 Dale-signed
 rule stays on the generic VM path). ``backend="oracle"`` keeps
 the literal per-step semantics as ground truth; ``backend="auto"`` selects
-the fused path, mirroring the impl auto-selection above.
+the fused path (the blocked ``neuron_scan`` variant on TPU), mirroring
+the impl auto-selection above.
+
+Instance grid axis
+------------------
+The multi-instance fleet (a batch of independent virtual chips) maps onto
+the kernels as a real leading grid axis, not a nested ``jax.vmap`` fold:
+the wrappers collapse an arbitrary instance prefix into one N axis with
+the helpers below, and each kernel's grid is ``(N, ...tile axes)`` — one
+kernel launch for the whole fleet. ``repro.parallel.sharding.Ax.INSTANCE``
+names the same axis for the mesh (instances shard over the data dims), so
+the grid axis and the sharding axis coincide by construction.
 """
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def fold_instance(x, n_core: int):
+    """[*prefix, *core] -> [N, *core] with N = prod(prefix) (N=1 when the
+    prefix is empty). ``n_core`` is the number of trailing core dims."""
+    core = x.shape[x.ndim - n_core:]
+    return x.reshape(math.prod(x.shape[:x.ndim - n_core]), *core)
+
+
+def unfold_instance(y, prefix):
+    """Inverse of ``fold_instance``: [N, *core] -> [*prefix, *core]."""
+    return y.reshape(*prefix, *y.shape[1:])
+
+
+def fold_instance_time(x, n_core: int):
+    """[T, *prefix, *core] -> [N, T, *core]: time-major window operands
+    (event streams, current windows) fold their instance prefix in front
+    of the time axis for the kernel instance grid."""
+    n_prefix = x.ndim - 1 - n_core
+    x = jnp.moveaxis(x, 0, n_prefix)
+    return fold_instance(x, n_core + 1)
+
+
+def unfold_instance_time(y, prefix):
+    """Inverse of ``fold_instance_time``: [N, T, *core] -> [T, *prefix,
+    *core]."""
+    y = y.reshape(*prefix, *y.shape[1:])
+    return jnp.moveaxis(y, len(prefix), 0)

@@ -26,8 +26,8 @@ from jax.experimental import pallas as pl
 
 def _kernel(pre_ref, post_ref, tp0_ref, tq0_ref, ac0_ref, aa0_ref,
             ac_ref, aa_ref, tp_ref, tq_ref, *, lam: float, sat: float):
-    pre = pre_ref[...].astype(jnp.float32)     # [T, rb]
-    post = post_ref[...].astype(jnp.float32)   # [T, cb]
+    pre = pre_ref[0].astype(jnp.float32)       # [T, rb]
+    post = post_ref[0].astype(jnp.float32)     # [T, cb]
     T = pre.shape[0]
 
     def body(t, carry):
@@ -40,15 +40,15 @@ def _kernel(pre_ref, post_ref, tp0_ref, tq0_ref, ac0_ref, aa0_ref,
         aa = jnp.minimum(aa + p_t[:, None] * tq[None, :], sat)
         return tp, tq, ac, aa
 
-    tp0 = tp0_ref[...].astype(jnp.float32)[0]
-    tq0 = tq0_ref[...].astype(jnp.float32)[0]
-    ac0 = ac0_ref[...].astype(jnp.float32)
-    aa0 = aa0_ref[...].astype(jnp.float32)
+    tp0 = tp0_ref[0].astype(jnp.float32)[0]
+    tq0 = tq0_ref[0].astype(jnp.float32)[0]
+    ac0 = ac0_ref[0].astype(jnp.float32)
+    aa0 = aa0_ref[0].astype(jnp.float32)
     tp, tq, ac, aa = jax.lax.fori_loop(0, T, body, (tp0, tq0, ac0, aa0))
-    ac_ref[...] = ac
-    aa_ref[...] = aa
-    tp_ref[...] = tp[None]
-    tq_ref[...] = tq[None]
+    ac_ref[0] = ac
+    aa_ref[0] = aa
+    tp_ref[0] = tp[None]
+    tq_ref[0] = tq[None]
 
 
 @functools.partial(jax.jit,
@@ -57,40 +57,43 @@ def correlation_window_pallas(pre, post, tp0, tq0, ac0, aa0, *,
                               lam: float, sat: float = 1023.0,
                               rb: int = 64, cb: int = 128,
                               interpret: bool = False):
-    """pre: [T, R]; post: [T, C]; tp0 [R]; tq0 [C]; ac0/aa0 [R, C].
+    """pre: [N, T, R]; post: [N, T, C]; tp0 [N, R]; tq0 [N, C]; ac0/aa0
+    [N, R, C] — the leading N is the instance grid axis (see
+    ``repro.kernels``); operands without it are promoted to N=1.
 
     Returns (a_causal, a_acausal, tp_final, tq_final).
     """
-    T, R = pre.shape
-    C = post.shape[1]
+    squeeze = pre.ndim == 2
+    if squeeze:
+        pre, post, tp0, tq0 = pre[None], post[None], tp0[None], tq0[None]
+        ac0, aa0 = ac0[None], aa0[None]
+    N, T, R = pre.shape
+    C = post.shape[-1]
     rb = min(rb, R)
     cb = min(cb, C)
     assert R % rb == 0 and C % cb == 0
-    grid = (R // rb, C // cb)
+    grid = (N, R // rb, C // cb)
+    acc_spec = pl.BlockSpec((1, rb, cb), lambda n, i, j: (n, i, j))
+    row_spec = pl.BlockSpec((1, 1, rb), lambda n, i, j: (n, 0, i))
+    col_spec = pl.BlockSpec((1, 1, cb), lambda n, i, j: (n, 0, j))
     out = pl.pallas_call(
         functools.partial(_kernel, lam=lam, sat=sat),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((T, rb), lambda i, j: (0, i)),
-            pl.BlockSpec((T, cb), lambda i, j: (0, j)),
-            pl.BlockSpec((1, rb), lambda i, j: (0, i)),
-            pl.BlockSpec((1, cb), lambda i, j: (0, j)),
-            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
-            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+            pl.BlockSpec((1, T, rb), lambda n, i, j: (n, 0, i)),
+            pl.BlockSpec((1, T, cb), lambda n, i, j: (n, 0, j)),
+            row_spec, col_spec, acc_spec, acc_spec,
         ],
-        out_specs=[
-            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
-            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
-            pl.BlockSpec((1, rb), lambda i, j: (0, i)),
-            pl.BlockSpec((1, cb), lambda i, j: (0, j)),
-        ],
+        out_specs=[acc_spec, acc_spec, row_spec, col_spec],
         out_shape=[
-            jax.ShapeDtypeStruct((R, C), jnp.float32),
-            jax.ShapeDtypeStruct((R, C), jnp.float32),
-            jax.ShapeDtypeStruct((1, R), jnp.float32),
-            jax.ShapeDtypeStruct((1, C), jnp.float32),
+            jax.ShapeDtypeStruct((N, R, C), jnp.float32),
+            jax.ShapeDtypeStruct((N, R, C), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1, R), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1, C), jnp.float32),
         ],
         interpret=interpret,
-    )(pre, post, tp0[None], tq0[None], ac0, aa0)
+    )(pre, post, tp0[:, None], tq0[:, None], ac0, aa0)
     ac, aa, tp, tq = out
-    return ac, aa, tp[0], tq[0]
+    if squeeze:
+        return ac[0], aa[0], tp[0, 0], tq[0, 0]
+    return ac, aa, tp[:, 0], tq[:, 0]

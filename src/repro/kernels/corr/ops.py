@@ -1,8 +1,16 @@
-"""Jit'd public wrapper for the fused correlation-window kernel."""
+"""Jit'd public wrapper for the fused correlation-window kernel.
+
+Spike windows are time-major ([T, ..., R] / [T, ..., C]) like everywhere
+in the emulation; an arbitrary instance prefix on the sensor state is
+folded into the kernel's instance grid axis (one launch for the whole
+fleet, see ``repro.kernels``). The ref path broadcasts natively.
+"""
 from __future__ import annotations
 
 import jax
 
+from repro.kernels import (fold_instance, fold_instance_time,
+                           unfold_instance)
 from repro.kernels.corr.kernel import correlation_window_pallas
 from repro.kernels.corr.ref import correlation_window_ref
 
@@ -13,10 +21,17 @@ _ref_jit = jax.jit(correlation_window_ref, static_argnames=("lam", "sat"))
 
 def correlation_window(pre, post, tp0, tq0, ac0, aa0, *, lam, sat=1023.0,
                        impl: str = "auto", **block_kw):
+    """pre: [T, ..., R]; post: [T, ..., C]; tp0 [..., R]; tq0 [..., C];
+    ac0/aa0 [..., R, C]. Returns (a_causal, a_acausal, tp, tq)."""
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
         return _ref_jit(pre, post, tp0, tq0, ac0, aa0, lam=lam, sat=sat)
-    return correlation_window_pallas(pre, post, tp0, tq0, ac0, aa0, lam=lam,
-                                     sat=sat, interpret=(impl == "interpret"),
-                                     **block_kw)
+    prefix = ac0.shape[:-2]
+    ac, aa, tp, tq = correlation_window_pallas(
+        fold_instance_time(pre, 1), fold_instance_time(post, 1),
+        fold_instance(tp0, 1), fold_instance(tq0, 1),
+        fold_instance(ac0, 2), fold_instance(aa0, 2),
+        lam=lam, sat=sat, interpret=(impl == "interpret"), **block_kw)
+    return (unfold_instance(ac, prefix), unfold_instance(aa, prefix),
+            unfold_instance(tp, prefix), unfold_instance(tq, prefix))

@@ -1,0 +1,1 @@
+from repro.kernels.neuron_scan.ops import neuron_window  # noqa: F401

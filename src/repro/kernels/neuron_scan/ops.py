@@ -1,0 +1,85 @@
+"""Jit'd public wrapper for the time-blocked neuron scan.
+
+``neuron_window`` integrates a whole [T, ..., C] synaptic-current window
+of AdEx dynamics in one call. ``impl`` follows the kernel-wrapper
+convention (auto | pallas | interpret | ref): the ref is the blocked jnp
+restructuring (``ref.py``), the Pallas kernel keeps the state VMEM-
+resident across time blocks with instances on a real grid axis
+(``kernel.py``). Both consume the exact ``repro.core.adex`` step op
+trees, so all impls (and the per-dt oracle scan) are bit-identical.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adex
+from repro.kernels import fold_instance, fold_instance_time, \
+    unfold_instance_time
+from repro.kernels.neuron_scan.kernel import DECAY_ROWS, PARAM_ROWS, \
+    neuron_window_pallas
+from repro.kernels.neuron_scan.ref import neuron_window_ref
+
+_ref_jit = jax.jit(neuron_window_ref,
+                   static_argnames=("dt", "use_adex", "block",
+                                    "trace_block", "record_v"))
+
+
+def neuron_window(state: adex.NeuronState, rate_counters, ie_t, ii_t,
+                  params, *, dt: float, use_adex: bool, decays=None,
+                  impl: str = "auto", block: int = 8,
+                  trace_block: int = 8, kernel_block: int = 32,
+                  record_v: bool = False):
+    """ie_t/ii_t: [T, ..., C] f32 net currents; state/params broadcast over
+    the instance prefix. Returns ``(new_state, rate_counters, recs)`` with
+    ``recs = (spikes_t,)`` or ``(spikes_t, v_t)`` — the same contract as
+    scanning ``adex.step`` over the window.
+
+    ``block``/``trace_block`` size the ref path's membrane / current-trace
+    scan slabs (CPU-tuned: small blocks keep the XLA:CPU loop body in
+    cache); ``kernel_block`` sizes the Pallas kernel's VMEM-resident time
+    block (bigger is better on TPU — fewer grid steps, state stays
+    on-chip either way)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if decays is None:
+        decays = adex.decay_factors(params, dt)
+    if impl == "ref":
+        return _ref_jit(state, rate_counters, ie_t, ii_t, params, dt=dt,
+                        use_adex=use_adex, decays=decays, block=block,
+                        trace_block=trace_block, record_v=record_v)
+
+    T = ie_t.shape[0]
+    C = ie_t.shape[-1]
+    prefix = ie_t.shape[1:-1]
+    blk = min(kernel_block, T)
+    pad = (-T) % blk
+    cshape = (*prefix, C)
+    rc = jnp.broadcast_to(rate_counters, cshape).astype(jnp.float32)
+    state6 = fold_instance(jnp.stack(
+        [jnp.broadcast_to(getattr(state, f), cshape).astype(jnp.float32)
+         for f in ("v", "w", "i_exc", "i_inh", "refrac")] + [rc],
+        axis=len(prefix)), 2)
+    rows = [params[k] for k in PARAM_ROWS] + [decays[k] for k in DECAY_ROWS]
+    params12 = fold_instance(jnp.stack(
+        [jnp.broadcast_to(r, cshape).astype(jnp.float32) for r in rows],
+        axis=len(prefix)), 2)
+    ie_p = jnp.pad(ie_t.astype(jnp.float32), [(0, pad)] + [(0, 0)] * (
+        ie_t.ndim - 1))
+    ii_p = jnp.pad(ii_t.astype(jnp.float32), [(0, pad)] + [(0, 0)] * (
+        ii_t.ndim - 1))
+    out = neuron_window_pallas(
+        fold_instance_time(ie_p, 1), fold_instance_time(ii_p, 1), state6,
+        params12, dt=dt, use_adex=use_adex, T=T, blk=blk,
+        record_v=record_v, interpret=(impl == "interpret"))
+    spikes = unfold_instance_time(out[0], prefix)[:T]
+    st6 = out[1].reshape(*prefix, 6, C)
+    idx = functools.partial(jnp.take, st6, axis=len(prefix))
+    new_state = adex.NeuronState(v=idx(0), w=idx(1), i_exc=idx(2),
+                                 i_inh=idx(3), refrac=idx(4))
+    recs = (spikes,)
+    if record_v:
+        recs = (spikes, unfold_instance_time(out[2], prefix)[:T])
+    return new_state, idx(5), recs

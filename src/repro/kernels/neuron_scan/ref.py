@@ -1,0 +1,116 @@
+"""Blocked jnp reference for the time-blocked neuron scan.
+
+Semantics source: ``repro.core.adex`` — ``integrate_currents`` and
+``membrane_step`` are the exact op trees the per-dt oracle computes, so
+this restructuring is bit-identical to scanning ``adex.step``; it only
+changes WHICH XLA program computes them:
+
+  1. The synaptic-current states (i_exc, i_inh) never read the membrane
+     state, so their recurrence runs as a separate window-wide scan with a
+     2-row packed carry and a tiny body (``trace_block`` steps unrolled
+     per iteration).
+  2. The sequential membrane core scans over *time blocks* instead of
+     dts: the carry is ONE packed [3, ..., C] array (v, w, refrac) — a
+     multi-array scan carry is the dominant per-iteration cost of the
+     XLA:CPU while loop — and each iteration advances ``block`` dt steps
+     of straight-line code, emitting a [block, ..., C] spike slab.
+  3. Rate counters leave the loop entirely: spikes are {0,1} floats, so
+     integer-valued f32 sums are exact in any order and
+     ``rc + spikes.sum(0)`` is bit-identical to the per-step ``rc + out``
+     chain.
+
+A trailing remainder (T not divisible by the block size) runs through the
+same per-step functions after the main blocked scan, so any T is exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adex
+
+
+def _trace_window(i_exc0, i_inh0, ie_t, ii_t, decays, blk: int):
+    """Whole-window net drive ``i_exc - i_inh`` [T, ..., C] plus the final
+    current states (exact sequential order, blocked into ``blk``-step
+    slabs). The per-step subtraction is the op ``step`` computed inline —
+    emitting it directly avoids materialising the [T, 2, ..., C] pair."""
+    T = ie_t.shape[0]
+    bshape = jnp.broadcast_shapes(i_exc0.shape, i_inh0.shape)
+    x0 = jnp.stack([jnp.broadcast_to(i_exc0, bshape).astype(jnp.float32),
+                    jnp.broadcast_to(i_inh0, bshape).astype(jnp.float32)])
+    dedi = jnp.stack([jnp.broadcast_to(decays["de"], bshape),
+                      jnp.broadcast_to(decays["di"], bshape)])
+    inj = jnp.stack([ie_t, ii_t], axis=1)              # [T, 2, ..., C]
+
+    def steps(x, u, n):
+        outs = []
+        for t in range(n):
+            x = x * dedi + u[t]
+            outs.append(x[0] - x[1])
+        return x, jnp.stack(outs)
+
+    n_main, tail = divmod(T, blk)
+    tr_main = None
+    if n_main:
+        def body(x, u):
+            return steps(x, u, blk)
+        x0, tr_main = jax.lax.scan(body, x0, inj[:n_main * blk]
+                                   .reshape(n_main, blk, *inj.shape[1:]))
+        tr_main = tr_main.reshape(n_main * blk, *tr_main.shape[2:])
+    if tail:
+        x0, tr_tail = steps(x0, inj[n_main * blk:], tail)
+        tr_main = (tr_tail if tr_main is None
+                   else jnp.concatenate([tr_main, tr_tail]))
+    return x0[0], x0[1], tr_main
+
+
+def neuron_window_ref(state: adex.NeuronState, rate_counters, ie_t, ii_t,
+                      params, *, dt: float, use_adex: bool, decays,
+                      block: int = 8, trace_block: int = 8,
+                      record_v: bool = False):
+    """Integrate a [T, ..., C] current window. Same contract as scanning
+    ``adex.step``: returns ``(new_state, rate_counters, outputs)`` with
+    ``outputs = (spikes_t,)`` or ``(spikes_t, v_t)``."""
+    T = ie_t.shape[0]
+    i_exc_f, i_inh_f, i_drive = _trace_window(
+        state.i_exc, state.i_inh, ie_t, ii_t, decays, trace_block)
+
+    bshape = jnp.broadcast_shapes(state.v.shape, state.w.shape,
+                                  state.refrac.shape)
+    p0 = jnp.stack([jnp.broadcast_to(state.v, bshape),
+                    jnp.broadcast_to(state.w, bshape),
+                    jnp.broadcast_to(state.refrac, bshape)])
+
+    def steps(p, d, n):
+        v, w, refrac = p[0], p[1], p[2]
+        spk, vs = [], []
+        for t in range(n):
+            v, w, refrac, out = adex.membrane_step(
+                v, w, refrac, d[t], params, dt, adex=use_adex,
+                decays=decays)
+            spk.append(out)
+            if record_v:
+                vs.append(v)
+        recs = (jnp.stack(spk),) + ((jnp.stack(vs),) if record_v else ())
+        return jnp.stack([v, w, refrac]), recs
+
+    n_main, tail = divmod(T, block)
+    recs = None
+    if n_main:
+        def body(p, d):
+            return steps(p, d, block)
+        p0, recs = jax.lax.scan(
+            body, p0, i_drive[:n_main * block]
+            .reshape(n_main, block, *i_drive.shape[1:]))
+        recs = tuple(r.reshape(n_main * block, *r.shape[2:]) for r in recs)
+    if tail:
+        p0, recs_tail = steps(p0, i_drive[n_main * block:], tail)
+        recs = (recs_tail if recs is None else
+                tuple(jnp.concatenate([a, b])
+                      for a, b in zip(recs, recs_tail)))
+
+    spikes_t = recs[0]
+    new_state = adex.NeuronState(v=p0[0], w=p0[1], i_exc=i_exc_f,
+                                 i_inh=i_inh_f, refrac=p0[2])
+    return new_state, rate_counters + spikes_t.sum(0), recs

@@ -1,6 +1,7 @@
 """Pallas kernel: synapse-array event path.
 
-i[b, c] = sum_r ev[b, r] * w[r, c] * (addr_store[r, c] == addr_event[b, r])
+i[n, b, c] = sum_r ev[n, b, r] * w[n, r, c] * (addr_store[n, r, c] ==
+addr_event[n, b, r])
 
 Hardware adaptation (DESIGN.md): on BSS-2 the address comparison happens in
 each synapse circuit as the event ripples down the row. On TPU the natural
@@ -9,6 +10,12 @@ the per-(batch,row) event address broadcasts against the stored-address
 tile, and the masked tile contracts against the event vector. Tiles are
 MXU/VPU aligned (row x 128-lane column blocks); the reduction runs over the
 row-block grid axis with an accumulator in the output block.
+
+The leading ``n`` is the **instance grid axis**: a fleet of independent
+chip instances (each with its own weights/addresses/events) runs as ONE
+kernel launch with instances as the outermost grid dimension — no nested
+``jax.vmap`` fold (see ``repro.kernels`` docstring). 2-D operands are
+accepted and treated as a single instance.
 """
 from __future__ import annotations
 
@@ -20,46 +27,49 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(ev_ref, ea_ref, w_ref, st_ref, out_ref):
-    r_idx = pl.program_id(2)
+    r_idx = pl.program_id(3)
 
     @pl.when(r_idx == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    ev = ev_ref[...].astype(jnp.float32)            # [bb, rb]
-    ea = ea_ref[...]                                # [bb, rb] int8
-    w = w_ref[...].astype(jnp.float32)              # [rb, cb]
-    st = st_ref[...]                                # [rb, cb] int8
+    ev = ev_ref[0].astype(jnp.float32)              # [bb, rb]
+    ea = ea_ref[0]                                  # [bb, rb] int8
+    w = w_ref[0].astype(jnp.float32)                # [rb, cb]
+    st = st_ref[0]                                  # [rb, cb] int8
 
     # [bb, rb, cb] masked tile — bounded by the block sizes, VMEM-resident
     mask = (st[None, :, :] == ea[:, :, None]).astype(jnp.float32)
     contrib = jnp.sum(ev[:, :, None] * (w[None, :, :] * mask), axis=1)
-    out_ref[...] += contrib
+    out_ref[0] += contrib
 
 
 @functools.partial(jax.jit, static_argnames=("bb", "cb", "rb", "interpret"))
 def synaptic_current_pallas(events, event_addr, weights, addresses, *,
                             bb: int = 8, cb: int = 128, rb: int = 64,
                             interpret: bool = False):
-    """events: [B, R] f32; event_addr: [B, R] i8; weights/addresses: [R, C]
-    i8. Returns [B, C] f32."""
-    B, R = events.shape
-    C = weights.shape[1]
+    """events: [N, B, R] f32; event_addr: [N, B, R] i8; weights/addresses:
+    [N, R, C] i8. Returns [N, B, C] f32. 2-D operands (no instance axis)
+    are promoted to N=1 and squeezed back."""
+    squeeze = events.ndim == 2
+    if squeeze:
+        events, event_addr = events[None], event_addr[None]
+        weights, addresses = weights[None], addresses[None]
+    N, B, R = events.shape
+    C = weights.shape[-1]
     bb = min(bb, B)
     cb = min(cb, C)
     rb = min(rb, R)
     assert B % bb == 0 and C % cb == 0 and R % rb == 0, (B, R, C, bb, rb, cb)
-    grid = (B // bb, C // cb, R // rb)
-    return pl.pallas_call(
+    grid = (N, B // bb, C // cb, R // rb)
+    ev_spec = pl.BlockSpec((1, bb, rb), lambda n, i, j, k: (n, i, k))
+    w_spec = pl.BlockSpec((1, rb, cb), lambda n, i, j, k: (n, k, j))
+    out = pl.pallas_call(
         _kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, rb), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bb, rb), lambda i, j, k: (i, k)),
-            pl.BlockSpec((rb, cb), lambda i, j, k: (k, j)),
-            pl.BlockSpec((rb, cb), lambda i, j, k: (k, j)),
-        ],
-        out_specs=pl.BlockSpec((bb, cb), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        in_specs=[ev_spec, ev_spec, w_spec, w_spec],
+        out_specs=pl.BlockSpec((1, bb, cb), lambda n, i, j, k: (n, i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, B, C), jnp.float32),
         interpret=interpret,
     )(events, event_addr, weights, addresses)
+    return out[0] if squeeze else out

@@ -2,11 +2,17 @@
 
 On TPU the Pallas path runs natively; elsewhere (CPU container) it runs in
 interpret mode or falls back to the jnp oracle — selected by ``impl``.
+
+Operands may carry an arbitrary instance prefix (events [..., B, R],
+weights [..., R, C]): the kernel path folds it into the instance grid
+axis (ONE launch for the whole fleet, see ``repro.kernels``), the oracle
+broadcasts natively.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.kernels import fold_instance, unfold_instance
 from repro.kernels.synray.kernel import synaptic_current_pallas
 from repro.kernels.synray.ref import synaptic_current_ref
 
@@ -22,6 +28,9 @@ def synaptic_current(events, event_addr, weights, addresses,
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
         return _ref_jit(events, event_addr, weights, addresses)
-    return synaptic_current_pallas(events, event_addr, weights, addresses,
-                                   interpret=(impl == "interpret"),
-                                   **block_kw)
+    prefix = weights.shape[:-2]
+    out = synaptic_current_pallas(
+        fold_instance(events, 2), fold_instance(event_addr, 2),
+        fold_instance(weights, 2), fold_instance(addresses, 2),
+        interpret=(impl == "interpret"), **block_kw)
+    return unfold_instance(out, prefix)

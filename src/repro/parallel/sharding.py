@@ -168,6 +168,28 @@ class ShardingCtx:
         """Cast a param to the compute dtype."""
         return p.astype(self.compute_dtype) if p.dtype != self.compute_dtype else p
 
+    # -- machine-model instance axis -----------------------------------------
+    def instance_sharding(self, shape, cols: Optional[int] = None
+                          ) -> Optional[NamedSharding]:
+        """Sharding for a machine-state leaf of the BSS-2 fleet: a leading
+        ``Ax.INSTANCE`` dim over the data axes, a trailing synapse-column
+        dim over ``model`` when divisible.
+
+        This is the mesh-side twin of the kernels' instance **grid** axis
+        (``repro.kernels.fold_instance``): the same leading dim the
+        blocked/fused kernels iterate as their outermost grid dimension is
+        the one the mesh distributes over ``data`` — the fleet maps onto
+        pods without reshuffling between the kernel and collective views.
+        """
+        if self.mesh is None:
+            return None
+        parts = [None] * len(shape)
+        parts[0] = self.act_rules[Ax.INSTANCE]
+        if cols is not None and len(shape) >= 2 and shape[-1] == cols:
+            parts[-1] = self.act_rules[Ax.NRN]
+        return NamedSharding(self.mesh, PSpec(*[
+            tuple(p) if isinstance(p, list) else p for p in parts]))
+
 
 # ---------------------------------------------------------------------------
 # Declarative parameters

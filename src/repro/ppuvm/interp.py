@@ -234,8 +234,10 @@ def run_program(words, weights, qc, qa, rates, mod=None, noise=None, *,
         return run_program_jax(words, weights, qc, qa, rates, mod, noise)
     if ex == "specialized":
         from repro.ppuvm import specialize
-        return specialize.run_program_specialized(
-            words, weights, qc, qa, rates, mod, noise)
+        # route through the jitted-closure cache: one compiled
+        # specialization per program image, shared across uploads/calls
+        return specialize.specialized_callable(words)(
+            weights, qc, qa, rates, mod, noise)
     if ex in ("pallas", "pallas_interpret"):
         from repro.kernels.ppuvm_exec import ops as exec_ops
         return exec_ops.run_program_tiled(

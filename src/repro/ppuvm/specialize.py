@@ -27,6 +27,8 @@ equivalence of all executors is additionally enforced by
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -73,3 +75,59 @@ def run_program_specialized(words, weights, qc, qa, rates, mod=None,
         if val is not None:
             regs[rd] = val
     return wmem, jnp.stack(regs)
+
+
+# ---------------------------------------------------------------------------
+# Jitted-closure cache: one compiled specialization per program image
+# ---------------------------------------------------------------------------
+#
+# The specializer re-decodes the word stream in Python on every trace. For
+# workloads that run many programs repeatedly — a playback suite uploading
+# dozens of rules, a sweep re-binding the same rule per configuration —
+# that is a retrace per upload. The cache memoizes ONE jitted closure per
+# program image, keyed on the raw word bytes: re-running (or re-uploading)
+# a program reuses the compiled executable via jax's own shape-keyed jit
+# cache underneath, and calling the closure inside an outer trace inlines
+# the cached jaxpr instead of unrolling the decode loop again.
+#
+# LRU-bounded: each entry pins an unrolled jaxpr + compiled executable, so
+# an unbounded dict would leak in workloads sweeping many one-off programs
+# (e.g. the differential fuzz corpus). 64 entries comfortably covers every
+# real suite (playback uploads a handful of rules) while bounding memory.
+
+_CACHE = {}                       # insertion-ordered = LRU via re-insert
+_CACHE_MAX = 64
+_STATS = dict(hits=0, misses=0)
+
+
+def specialized_callable(words):
+    """The memoized jitted form of ``run_program_specialized`` for a
+    concrete program image: ``fn(weights, qc, qa, rates, mod, noise)``.
+    Identical word bytes -> the same jitted closure object."""
+    if isinstance(words, jax.core.Tracer):
+        raise TypeError(
+            "specialized executor needs a concrete word stream (got a "
+            "tracer) — pass the program as a closed-over constant, or use "
+            'executor="scan"')
+    words_np = np.asarray(words, np.int64)
+    key = words_np.tobytes()
+    fn = _CACHE.pop(key, None)
+    if fn is None:
+        _STATS["misses"] += 1
+        fn = jax.jit(functools.partial(run_program_specialized, words_np))
+        while len(_CACHE) >= _CACHE_MAX:        # evict least-recently used
+            _CACHE.pop(next(iter(_CACHE)))
+    else:
+        _STATS["hits"] += 1
+    _CACHE[key] = fn                            # (re-)insert as most recent
+    return fn
+
+
+def cache_stats():
+    """(hits, misses, size) of the specialized-closure cache."""
+    return dict(_STATS, size=len(_CACHE))
+
+
+def cache_clear():
+    _CACHE.clear()
+    _STATS.update(hits=0, misses=0)

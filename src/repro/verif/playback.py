@@ -133,24 +133,36 @@ class FastBackend:
         self.ppu_executor = ppu_executor
         self._ppu_prog = None
         self._ppu_run = None
+        self._run_cache = {}
 
     def _bind_program(self, words: np.ndarray):
         """Jit one PPU_RUN closure per uploaded program: the word stream
         is a concrete constant of the traced function, which is what lets
-        the specialized executor unroll it at trace time."""
+        the specialized executor unroll it at trace time. Closures are
+        memoized on the program word bytes, so suites that re-upload the
+        same rules (or interleave several) never retrace per upload — and
+        the specialized executor additionally shares its unrolled jaxpr
+        process-wide via ``repro.ppuvm.specialize``'s closure cache."""
         from repro.ppuvm import interp
 
         ex = interp.resolve_executor(self.ppu_executor, words)
-        self._ppu_prog = jnp.asarray(words)
+        prog = jnp.asarray(words)
+        key = np.asarray(words).tobytes()
+        self._ppu_prog = prog
+        cached = self._run_cache.get(key)
+        if cached is not None:
+            self._ppu_run = cached
+            return
 
         def run(state, mod_fp, noise_fp):
             return self._ppu.run_program_fixed(
-                state, self._ppu_prog, mod_fp=mod_fp, noise_fp=noise_fp,
+                state, prog, mod_fp=mod_fp, noise_fp=noise_fp,
                 executor=ex)
 
         # the numpy executor is host-side by definition — it must see
         # concrete arrays, so it runs eagerly instead of under jit
         self._ppu_run = run if ex == "numpy" else jax.jit(run)
+        self._run_cache[key] = self._ppu_run
 
     def execute(self, program: List[Instr]) -> List[Tuple[int, str, np.ndarray]]:
         trace = []

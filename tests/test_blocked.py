@@ -1,0 +1,237 @@
+"""Blocked-backend equivalence: the time-blocked neuron window must be
+BIT-IDENTICAL to the per-dt oracle.
+
+Unlike the fused suite's float tolerances, spikes here are asserted with
+exact equality: the blocked restructuring (separate synaptic-current trace
+scan, packed-carry block scan, rate counters summed outside the loop, the
+VMEM-resident Pallas kernel) reuses the oracle's per-step op trees
+(``adex.integrate_currents``/``membrane_step``) verbatim, so nothing may
+drift — across block sizes, window lengths that do not divide the block,
+instance prefixes, and the kernel in interpret mode.
+
+``ANNCORE_KERNEL_IMPL`` (default "auto") forces the kernel impl for the
+main equivalence class — the tier-2 CI job sets "interpret" to run the
+whole suite through the actual Pallas kernels.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.bss2 import BSS2
+from repro.core import adex
+from repro.core.anncore import AnnCore
+from repro.verif.mismatch import sample_instance
+
+CFG = dataclasses.replace(BSS2.reduced(), n_rows=16, n_cols=16)
+KERNEL_IMPL = os.environ.get("ANNCORE_KERNEL_IMPL", "auto")
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _events(T, prefix, key=0, p=0.15, n_addr=4):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    ev = (jax.random.uniform(k1, (T, *prefix, CFG.n_rows)) < p
+          ).astype(jnp.float32)
+    ad = jax.random.randint(k2, (T, *prefix, CFG.n_rows), 0, n_addr,
+                            jnp.int8)
+    return ev, ad
+
+
+def _cores(prefix, **kw):
+    inst = sample_instance(CFG, jax.random.PRNGKey(0), prefix)
+    oracle = AnnCore(CFG, inst, backend="oracle")
+    fused = AnnCore(CFG, inst, backend="fused", kernel_impl=KERNEL_IMPL)
+    blocked = AnnCore(CFG, inst, backend="blocked",
+                      kernel_impl=KERNEL_IMPL, **kw)
+    st = oracle.init_state(prefix)
+    kw_, ka = jax.random.split(jax.random.PRNGKey(9))
+    st = st._replace(syn=st.syn._replace(
+        weights=jax.random.randint(kw_, (*prefix, CFG.n_rows, CFG.n_cols),
+                                   20, 64, jnp.int8),
+        addresses=jax.random.randint(ka, (*prefix, CFG.n_rows, CFG.n_cols),
+                                     0, 4, jnp.int8)))
+    return oracle, fused, blocked, st
+
+
+def _assert_state_close(s1, s2):
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **TOL)
+
+
+class TestBlockedEquivalence:
+    @pytest.mark.parametrize("block_size", [4, 8, 16])
+    def test_spikes_bit_identical_to_oracle(self, block_size):
+        oracle, _, blocked, st = _cores((), block_size=block_size)
+        ev, ad = _events(200, ())
+        s1, o1 = jax.jit(oracle.run)(st, ev, ad)
+        s2, o2 = jax.jit(blocked.run)(st, ev, ad)
+        assert float(o1["spikes"].sum()) > 0, "drive must elicit spikes"
+        np.testing.assert_array_equal(np.asarray(o1["spikes"]),
+                                      np.asarray(o2["spikes"]))
+        _assert_state_close(s1, s2)
+
+    @pytest.mark.parametrize("T,block_size,trace_block",
+                             [(200, 7, 9), (101, 16, 16), (50, 64, 64)])
+    def test_window_not_divisible_by_block(self, T, block_size, trace_block):
+        """Tails (T % block != 0, even block > T) run through the same
+        per-step functions and stay bit-exact."""
+        oracle, _, blocked, st = _cores((), block_size=block_size,
+                                        trace_block=trace_block,
+                                        kernel_block=16)
+        ev, ad = _events(T, (), key=1)
+        s1, o1 = jax.jit(oracle.run)(st, ev, ad)
+        s2, o2 = jax.jit(blocked.run)(st, ev, ad)
+        np.testing.assert_array_equal(np.asarray(o1["spikes"]),
+                                      np.asarray(o2["spikes"]))
+        _assert_state_close(s1, s2)
+
+    def test_record_v(self):
+        oracle, _, blocked, st = _cores(())
+        ev, ad = _events(150, (), key=2)
+        s1, o1 = jax.jit(lambda s, e, a: oracle.run(s, e, a, True))(
+            st, ev, ad)
+        s2, o2 = jax.jit(lambda s, e, a: blocked.run(s, e, a, True))(
+            st, ev, ad)
+        np.testing.assert_array_equal(np.asarray(o1["spikes"]),
+                                      np.asarray(o2["spikes"]))
+        np.testing.assert_allclose(np.asarray(o1["v"]),
+                                   np.asarray(o2["v"]), **TOL)
+        _assert_state_close(s1, s2)
+
+    def test_batched_instance_prefix(self):
+        """A fleet of instances rides the kernels' instance grid axis (or
+        the ref path's native broadcasting) — still bit-exact spikes."""
+        prefix = (3,)
+        oracle, fused, blocked, st = _cores(prefix)
+        ev, ad = _events(150, prefix, key=3)
+        s1, o1 = jax.jit(oracle.run)(st, ev, ad)
+        s2, o2 = jax.jit(blocked.run)(st, ev, ad)
+        s3, o3 = jax.jit(fused.run)(st, ev, ad)
+        np.testing.assert_array_equal(np.asarray(o1["spikes"]),
+                                      np.asarray(o2["spikes"]))
+        np.testing.assert_allclose(np.asarray(o1["spikes"]),
+                                   np.asarray(o3["spikes"]), **TOL)
+        _assert_state_close(s1, s2)
+
+    def test_matches_fused_backend(self):
+        """blocked == fused == oracle on one stream (three-way lockstep)."""
+        oracle, fused, blocked, st = _cores(())
+        ev, ad = _events(120, (), key=4)
+        _, o1 = jax.jit(oracle.run)(st, ev, ad)
+        _, o2 = jax.jit(fused.run)(st, ev, ad)
+        _, o3 = jax.jit(blocked.run)(st, ev, ad)
+        np.testing.assert_array_equal(np.asarray(o1["spikes"]),
+                                      np.asarray(o3["spikes"]))
+        np.testing.assert_allclose(np.asarray(o2["spikes"]),
+                                   np.asarray(o3["spikes"]), **TOL)
+
+
+class TestBlockedKernelInterpret:
+    """The Pallas neuron_scan kernel itself (interpret mode on CPU):
+    VMEM-resident state across time blocks, instance grid axis, in-kernel
+    tail masking."""
+
+    @pytest.mark.parametrize("prefix", [(), (2,)])
+    @pytest.mark.parametrize("T", [48, 50])
+    def test_kernel_matches_oracle(self, prefix, T):
+        oracle, _, _, st = _cores(prefix)
+        blocked = AnnCore(CFG, oracle.inst, backend="blocked",
+                          kernel_impl="interpret", kernel_block=16)
+        ev, ad = _events(T, prefix, key=5, p=0.25)
+        s1, o1 = oracle.run(st, ev, ad, record_v=True)
+        s2, o2 = blocked.run(st, ev, ad, record_v=True)
+        np.testing.assert_array_equal(np.asarray(o1["spikes"]),
+                                      np.asarray(o2["spikes"]))
+        np.testing.assert_allclose(np.asarray(o1["v"]),
+                                   np.asarray(o2["v"]), atol=1e-3)
+        np.testing.assert_array_equal(np.asarray(s1.rate_counters),
+                                      np.asarray(s2.rate_counters))
+
+    def test_ops_direct_ref_vs_interpret(self):
+        """The neuron_window op: blocked jnp ref vs the kernel in
+        interpret mode, bit-exact spikes + matching final state."""
+        from repro.kernels.neuron_scan import ops as neuron_ops
+        prefix = (2,)
+        inst = sample_instance(CFG, jax.random.PRNGKey(0), prefix)
+        params = inst["neuron_params"]
+        T, C = 50, CFG.n_cols
+        ks = jax.random.split(jax.random.PRNGKey(6), 2)
+        ie = jax.random.uniform(ks[0], (T, *prefix, C)) * 120.0
+        ii = jax.random.uniform(ks[1], (T, *prefix, C)) * 60.0
+        st = adex.init_state((*prefix, C), params)
+        rc = jnp.zeros((*prefix, C))
+        outs = {}
+        for impl in ("ref", "interpret"):
+            outs[impl] = neuron_ops.neuron_window(
+                st, rc, ie, ii, params, dt=CFG.dt,
+                use_adex=CFG.neuron.adex, impl=impl, kernel_block=16,
+                record_v=True)
+        np.testing.assert_array_equal(np.asarray(outs["ref"][2][0]),
+                                      np.asarray(outs["interpret"][2][0]))
+        np.testing.assert_array_equal(np.asarray(outs["ref"][1]),
+                                      np.asarray(outs["interpret"][1]))
+        for a, b in zip(outs["ref"][0], outs["interpret"][0]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4)
+
+    def test_rate_counters_exact_integer(self):
+        """rc leaves the loop as a sum — must equal the per-step chain
+        exactly (integer-valued f32)."""
+        oracle, _, blocked, st = _cores(())
+        ev, ad = _events(200, (), key=7, p=0.3)
+        s1, _ = jax.jit(oracle.run)(st, ev, ad)
+        s2, _ = jax.jit(blocked.run)(st, ev, ad)
+        np.testing.assert_array_equal(np.asarray(s1.rate_counters),
+                                      np.asarray(s2.rate_counters))
+        assert float(s1.rate_counters.sum()) > 0
+
+
+class TestBlockedTraining:
+    def test_blocked_scan_matches_fused_scan(self):
+        """run_training on the blocked backend == fused backend (same
+        seeds, whole-experiment lax.scan composes with time blocks)."""
+        from repro.core.hybrid import RSTDPConfig, run_training
+        ecfg = RSTDPConfig(trial_steps=96)
+        o1, s1, _ = run_training(n_trials=8, seed=5, ecfg=ecfg,
+                                 backend="fused")
+        o2, s2, _ = run_training(n_trials=8, seed=5, ecfg=ecfg,
+                                 backend="blocked")
+        np.testing.assert_allclose(o1["w_signed_final"],
+                                   o2["w_signed_final"], **TOL)
+        np.testing.assert_allclose(o1["reward"], o2["reward"], **TOL)
+        np.testing.assert_allclose(o1["rates"], o2["rates"], **TOL)
+
+    def test_blocked_scan_matches_blocked_dispatch(self):
+        """Scan-over-trials vs per-trial dispatch on the SAME blocked
+        backend: identical RNG path, bit-identical observables."""
+        from repro.core.hybrid import RSTDPConfig, run_training
+        ecfg = RSTDPConfig(trial_steps=96)
+        o1, _, _ = run_training(n_trials=7, seed=6, ecfg=ecfg,
+                                backend="blocked", scan=True)
+        o2, _, _ = run_training(n_trials=7, seed=6, ecfg=ecfg,
+                                backend="blocked", scan=False)
+        np.testing.assert_allclose(o1["w_signed_final"],
+                                   o2["w_signed_final"], **TOL)
+        np.testing.assert_array_equal(o1["stim"], o2["stim"])
+        np.testing.assert_allclose(o1["mean_reward"], o2["mean_reward"],
+                                   **TOL)
+
+    def test_block_size_threads_through_run_training(self):
+        """The block-size knob reaches the core and odd sizes (trial_steps
+        not divisible) still reproduce the fused result."""
+        from repro.core.hybrid import RSTDPConfig, run_training
+        ecfg = RSTDPConfig(trial_steps=96)
+        o1, _, meta = run_training(n_trials=5, seed=7, ecfg=ecfg,
+                                   backend="blocked", block_size=7,
+                                   trace_block=9, kernel_block=16)
+        assert meta["core"].block_size == 7
+        assert meta["core"].trace_block == 9
+        assert meta["core"].kernel_block == 16
+        o2, _, _ = run_training(n_trials=5, seed=7, ecfg=ecfg,
+                                backend="fused")
+        np.testing.assert_allclose(o1["w_signed_final"],
+                                   o2["w_signed_final"], **TOL)

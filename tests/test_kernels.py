@@ -52,6 +52,23 @@ class TestSynray:
             np.broadcast_to(np.asarray(w).astype(np.float32).sum(0), (B, C)),
             rtol=1e-6)
 
+    def test_instance_grid_axis(self):
+        """[N, ...] operands ride the leading grid dimension: each
+        instance's result equals its own 2-D kernel call."""
+        N, B, R, C = 3, 4, 64, 128
+        ks = jax.random.split(_rng("synray-inst"), 4)
+        ev = (jax.random.uniform(ks[0], (N, B, R)) < 0.2).astype(jnp.float32)
+        ea = jax.random.randint(ks[1], (N, B, R), 0, 8, jnp.int8)
+        w = jax.random.randint(ks[2], (N, R, C), 0, 64, jnp.int8)
+        st = jax.random.randint(ks[3], (N, R, C), 0, 8, jnp.int8)
+        out = synaptic_current_pallas(ev, ea, w, st, interpret=True)
+        assert out.shape == (N, B, C)
+        for n in range(N):
+            one = synaptic_current_pallas(ev[n], ea[n], w[n], st[n],
+                                          interpret=True)
+            np.testing.assert_array_equal(np.asarray(out[n]),
+                                          np.asarray(one))
+
 
 class TestCorr:
     @pytest.mark.parametrize("T,R,C,rb,cb", [
@@ -87,6 +104,28 @@ class TestCorr:
             lam=0.9, sat=sat, interpret=True)
         assert float(jnp.max(ac)) <= sat + 1e-6
         assert float(jnp.max(aa)) <= sat + 1e-6
+
+    def test_instance_grid_axis(self):
+        """The correlation kernel's leading instance grid axis: each
+        instance integrates independently."""
+        N, T, R, C = 2, 32, 64, 128
+        ks = jax.random.split(_rng("corr-inst"), 4)
+        pre = (jax.random.uniform(ks[0], (N, T, R)) < 0.1).astype(
+            jnp.float32)
+        post = (jax.random.uniform(ks[1], (N, T, C)) < 0.1).astype(
+            jnp.float32)
+        tp0 = jax.random.uniform(ks[2], (N, R))
+        tq0 = jax.random.uniform(ks[3], (N, C))
+        ac0 = jnp.zeros((N, R, C))
+        lam = 0.95
+        got = correlation_window_pallas(pre, post, tp0, tq0, ac0, ac0,
+                                        lam=lam, interpret=True)
+        for n in range(N):
+            one = correlation_window_pallas(
+                pre[n], post[n], tp0[n], tq0[n], ac0[n], ac0[n], lam=lam,
+                interpret=True)
+            for g, o in zip((x[n] for x in got), one):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(o))
 
 
 class TestPPUUpdate:

@@ -1,0 +1,113 @@
+"""Specialized-executor closure cache (ROADMAP item): one compiled
+specialization per program image, keyed on the raw word bytes — playback
+suites that upload dozens of rules (or re-upload the same one) must not
+re-unroll/retrace per upload."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ppuvm import interp, isa, programs, specialize
+from repro.ppuvm.asm import Asm
+
+
+def _operands(seed=0, shape=(8, 16)):
+    rng = np.random.RandomState(seed)
+    return dict(
+        weights=jnp.asarray(rng.randint(0, 64, shape), jnp.int32),
+        qc=jnp.asarray(rng.randint(0, 256, shape), jnp.int32),
+        qa=jnp.asarray(rng.randint(0, 256, shape), jnp.int32),
+        rates=jnp.asarray(rng.randint(0, 8, shape[-1:]).astype(np.float32)))
+
+
+class TestSpecializedClosureCache:
+    def setup_method(self, method):
+        specialize.cache_clear()
+
+    def test_same_program_hits(self):
+        words = programs.rstdp_program(eta=4.0)
+        ops = _operands()
+        f1 = specialize.specialized_callable(words)
+        f2 = specialize.specialized_callable(np.array(words))  # fresh array
+        assert f1 is f2, "identical word bytes must share one closure"
+        stats = specialize.cache_stats()
+        assert stats["misses"] == 1 and stats["hits"] == 1
+        w1, r1 = f1(ops["weights"], ops["qc"], ops["qa"], ops["rates"],
+                    None, None)
+        # cached closure == direct specializer, bit-for-bit
+        w2, r2 = specialize.run_program_specialized(
+            words, ops["weights"], ops["qc"], ops["qa"], ops["rates"])
+        np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+    def test_lru_eviction_bounds_cache(self):
+        """One-off program sweeps must not grow the cache unboundedly —
+        least-recently-used closures are evicted at the cap."""
+        def one_off(i):                   # distinct Q8.8 immediate per i
+            asm = Asm()
+            asm.splat(asm.reg("r"), i / 256.0)
+            return asm.build()
+
+        for i in range(specialize._CACHE_MAX + 5):
+            specialize.specialized_callable(one_off(i + 1))
+        stats = specialize.cache_stats()
+        assert stats["size"] == specialize._CACHE_MAX
+        # the most recent entry still hits ...
+        hits0 = stats["hits"]
+        specialize.specialized_callable(one_off(specialize._CACHE_MAX + 5))
+        assert specialize.cache_stats()["hits"] == hits0 + 1
+        # ... while the oldest was evicted (re-specializes as a miss)
+        misses0 = specialize.cache_stats()["misses"]
+        specialize.specialized_callable(one_off(1))
+        assert specialize.cache_stats()["misses"] == misses0 + 1
+
+    def test_distinct_programs_distinct_entries(self):
+        w1 = programs.rstdp_program(eta=4.0)
+        w2 = programs.rstdp_program(eta=8.0)
+        specialize.specialized_callable(w1)
+        specialize.specialized_callable(w2)
+        specialize.specialized_callable(w1)
+        stats = specialize.cache_stats()
+        assert stats["size"] == 2
+        assert stats["misses"] == 2 and stats["hits"] == 1
+
+    def test_run_program_routes_through_cache(self):
+        words = programs.stdp_program()
+        ops = _operands(1)
+        out1 = interp.run_program(words, ops["weights"], ops["qc"],
+                                  ops["qa"], ops["rates"],
+                                  executor="specialized")
+        misses = specialize.cache_stats()["misses"]
+        out2 = interp.run_program(words, ops["weights"], ops["qc"],
+                                  ops["qa"], ops["rates"],
+                                  executor="specialized")
+        stats = specialize.cache_stats()
+        assert stats["misses"] == misses, "second run must not re-specialize"
+        assert stats["hits"] >= 1
+        np.testing.assert_array_equal(np.asarray(out1[0]),
+                                      np.asarray(out2[0]))
+
+    def test_playback_reupload_no_retrace(self):
+        """A playback suite re-uploading rules: the FastBackend binds each
+        program once and the specializer compiles each image once, however
+        many uploads interleave."""
+        from repro.configs.bss2 import BSS2
+        from repro.verif import playback as pb
+        cfg = BSS2.reduced()
+        rules = [programs.rstdp_program(eta=4.0), programs.stdp_program()]
+        prog = [pb.write_weights(np.full((cfg.n_rows, cfg.n_cols), 20,
+                                         np.int8)),
+                pb.write_addresses(np.zeros((cfg.n_rows, cfg.n_cols),
+                                            np.int8))]
+        mod = np.zeros((1, cfg.n_cols), np.float32)
+        for _ in range(3):                     # re-upload suite, 3 rounds
+            for words in rules:
+                prog.append(pb.write_ppu_program(words))
+                prog.append(pb.ppu_run(mod=mod))
+            prog.append(pb.read_weights())
+        be = pb.FastBackend(cfg, ppu_executor="specialized")
+        trace = be.execute(prog)
+        assert len(trace) > 0
+        assert len(be._run_cache) == len(rules), \
+            "one jitted PPU_RUN closure per distinct program image"
+        stats = specialize.cache_stats()
+        assert stats["misses"] <= len(rules), stats
