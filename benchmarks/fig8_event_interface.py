@@ -49,8 +49,52 @@ def run():
     print(f"event path: {n_events/dt/1e6:.2f} M events/s "
           f"({dt*1e6:.0f} us per {int(n_events)}-event step, "
           f"{R}x{C} array, batch {B})")
+
+    # firing-rate sweep: events/s through the whole-window path, dense vs
+    # event-sparse — the paper budgets the event bus at ~0.4M events/s, so
+    # per-event cost of the emulation backends belongs in the same
+    # artifact. Work per window is O(T*R*C) dense but O(n_events * C)
+    # sparse: dense events/s COLLAPSES at low rates (same matmul, fewer
+    # events to bill it to) while sparse stays roughly flat.
+    from repro.core import events as ev_mod
+    from repro.core import synapse
+    T = 128
+    dense_fn = jax.jit(lambda *o: synapse.synaptic_current_window(
+        *o, sparse="never"))
+    rate_sweep = []
+    for rate in (0.001, 0.01, 0.05, 0.1, 0.5):
+        ks = jax.random.split(jax.random.PRNGKey(int(rate * 1e4)), 3)
+        fired = jax.random.uniform(ks[0], (T, R)) < rate
+        evt = jnp.where(fired, jax.random.uniform(
+            ks[1], (T, R), minval=0.1, maxval=1.5), 0.0)
+        adt = jax.random.randint(ks[2], (T, R), 0, 64, jnp.int8)
+        n, kmax = (int(x) for x in ev_mod.window_stats(evt))
+        E = max(32, ((n + 7) // 8) * 8)
+        K = max(8, ((kmax + 3) // 4) * 4)
+        sparse_fn = jax.jit(lambda *o, E=E, K=K: synapse.
+                            synaptic_current_window(
+                                *o, sparse="always", max_events=E,
+                                k_cap=K))
+
+        def _t(fn):
+            fn(w, st, evt, adt, 1.0).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(10):
+                out = fn(w, st, evt, adt, 1.0)
+            out.block_until_ready()
+            return (time.perf_counter() - t0) / 10
+
+        td, ts = _t(dense_fn), _t(sparse_fn)
+        rate_sweep.append(dict(
+            rate=rate, n_events=n, dense_us=td * 1e6, sparse_us=ts * 1e6,
+            dense_events_per_s=n / td, sparse_events_per_s=n / ts))
+    print(f"# firing-rate sweep [T={T}, {R}x{C} window]: events/s by path")
+    for s in rate_sweep:
+        print(f"  rate={s['rate']:<6g} n={s['n_events']:<6d} "
+              f"dense {s['dense_events_per_s']/1e6:8.3f} M ev/s   "
+              f"sparse {s['sparse_events_per_s']/1e6:8.3f} M ev/s")
     return dict(name="fig8_event_interface", max_dev=max_dev,
-                events_per_s=n_events / dt)
+                events_per_s=n_events / dt, rate_sweep=rate_sweep)
 
 
 if __name__ == "__main__":

@@ -16,6 +16,67 @@ def _time(f, *args, iters=30):
     return (time.perf_counter() - t0) / iters
 
 
+def _sparse_density_sweep():
+    """Dense vs event-sparse synaptic window across firing-rate densities
+    (full-size window: the production shape of one blocked-backend trial).
+    Returns the sweep plus the measured dense/sparse crossover density —
+    the number ``synapse.SPARSE_THRESHOLD`` is calibrated against."""
+    import numpy as np
+    from repro.core import events, synapse
+
+    T, R, C = 128, 256, 512
+    w = jax.random.randint(jax.random.PRNGKey(1), (R, C), 0, 64, jnp.int8)
+    a = jax.random.randint(jax.random.PRNGKey(2), (R, C), 0, 4, jnp.int8)
+
+    dense_fn = jax.jit(lambda *o: synapse.synaptic_current_window(
+        *o, sparse="never"))
+    auto_fn = jax.jit(lambda *o: synapse.synaptic_current_window(
+        *o, sparse="auto"))
+
+    sweep = []
+    for p in (0.001, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0):
+        ks = jax.random.split(jax.random.PRNGKey(int(p * 10000)), 3)
+        fired = jax.random.uniform(ks[0], (T, R)) < p
+        ev = jnp.where(fired, jax.random.uniform(
+            ks[1], (T, R), minval=0.1, maxval=1.5), 0.0)
+        ad = jax.random.randint(ks[2], (T, R), 0, 4, jnp.int8)
+        n, kmax = (int(x) for x in events.window_stats(ev))
+        # capacities sized for THIS density (the honest sparse cost: a
+        # deployment tuning its threshold sizes the stream accordingly)
+        E = max(32, ((n + 7) // 8) * 8)
+        K = max(8, ((kmax + 3) // 4) * 4)
+        sparse_fn = jax.jit(lambda *o, E=E, K=K: synapse.
+                            synaptic_current_window(
+                                *o, sparse="always", max_events=E,
+                                k_cap=K))
+        t_dense = _time(dense_fn, w, a, ev, ad, 1.0)
+        t_sparse = _time(sparse_fn, w, a, ev, ad, 1.0)
+        t_auto = _time(auto_fn, w, a, ev, ad, 1.0)
+        sweep.append(dict(density=p, n_events=n, dense_us=t_dense * 1e6,
+                          sparse_us=t_sparse * 1e6, auto_us=t_auto * 1e6,
+                          speedup=t_dense / t_sparse))
+
+    # crossover: lowest swept density where dense is at least as fast
+    crossover = next((s["density"] for s in sweep if s["speedup"] <= 1.0),
+                     1.0)
+    low, high = sweep[0], sweep[-1]
+    auto_ok = (low["auto_us"] < low["dense_us"]
+               and high["auto_us"] < 1.5 * high["dense_us"])
+    at_1pct = next(s for s in sweep if s["density"] == 0.01)
+    print("# synray_sparse density sweep "
+          f"[T={T}, R={R}, C={C}] (us/window)")
+    for s in sweep:
+        print(f"  p={s['density']:<6g} dense {s['dense_us']:8.1f}  "
+              f"sparse {s['sparse_us']:8.1f}  auto {s['auto_us']:8.1f}  "
+              f"speedup {s['speedup']:5.2f}x")
+    print(f"  crossover ~{crossover:g}, speedup@1% "
+          f"{at_1pct['speedup']:.2f}x, auto tracks best: {auto_ok}")
+    return dict(sweep=sweep, crossover_density=crossover,
+                speedup_at_1pct=at_1pct["speedup"],
+                auto_tracks_best=bool(auto_ok),
+                threshold_default=synapse.SPARSE_THRESHOLD)
+
+
 def run():
     from repro.kernels.synray.ref import synaptic_current_ref
     from repro.kernels.corr.ref import correlation_window_ref
@@ -70,7 +131,9 @@ def run():
     print("# kernel microbenchmarks (oracle path, CPU container)")
     for name, us, note in rows:
         print(f"{name:12s} {us:9.1f} us/call   {note}")
-    return dict(name="kernels", rows=[(n, u) for n, u, _ in rows])
+    sparse = _sparse_density_sweep()
+    return dict(name="kernels", rows=[(n, u) for n, u, _ in rows],
+                synray_sparse=sparse)
 
 
 if __name__ == "__main__":

@@ -18,9 +18,28 @@ across PRs); without it results are print-only.
 """
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 import traceback
+
+
+def _host_header():
+    """Attribution header for BENCH_* trajectory files: which commit, which
+    accelerator, and which AnnCore backend produced the numbers (ROADMAP
+    "bench trajectory discipline" — the files travel across machines)."""
+    try:
+        sha = subprocess.check_output(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        sha = None
+    import jax
+    backend = jax.default_backend()
+    return dict(git_sha=sha, jax_backend=backend,
+                anncore_backend="blocked" if backend == "tpu" else "fused")
 
 
 def _jsonable(x):
@@ -80,7 +99,7 @@ def main() -> None:
         print(f"{r['name']},{us:.1f},{derived}")
     if args.json:
         payload = dict(timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
-                       argv=sys.argv[1:], failed=failed,
+                       argv=sys.argv[1:], **_host_header(), failed=failed,
                        results=_jsonable(results))
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)

@@ -87,12 +87,21 @@ class AnnCore:
     ``block_size``/``trace_block``/``kernel_block``: time-block sizes of
     the "blocked" backend (membrane scan slab, current-trace slab, and
     the Pallas kernel's VMEM-resident block).
+    ``sparse_mode``: the event-sparse synaptic path of the fused/blocked
+    backends — "auto" (default: route windows through the sparse
+    gather-accumulate kernel when they provably fit the event capacities,
+    dense otherwise — bit-identical either way), "never", or "always"
+    (see ``synapse.synaptic_current_window``). ``sparse_threshold`` /
+    ``sparse_max_events`` / ``sparse_k_cap`` override the density gate
+    and the static stream capacities.
     """
 
     def __init__(self, cfg: BSS2Config, inst: Dict, backend: str = "auto",
                  kernel_impl: str = "auto", const_addr: bool = False,
                  block_size: int = 8, trace_block: int = 8,
-                 kernel_block: int = 32):
+                 kernel_block: int = 32, sparse_mode: str = "auto",
+                 sparse_threshold: float = None,
+                 sparse_max_events: int = None, sparse_k_cap: int = None):
         self.cfg = cfg
         self.inst = inst
         if backend == "auto":
@@ -106,6 +115,10 @@ class AnnCore:
         self.block_size = block_size
         self.trace_block = trace_block
         self.kernel_block = kernel_block
+        self.sparse_mode = sparse_mode
+        self.sparse_threshold = sparse_threshold
+        self.sparse_max_events = sparse_max_events
+        self.sparse_k_cap = sparse_k_cap
 
     def init_state(self, prefix=()) -> AnnCoreState:
         cfg = self.cfg
@@ -224,14 +237,18 @@ class AnnCore:
         #    the synray kernel).
         syn = state.syn
         gain = inst["weight_gain"]
+        sparse_kw = dict(sparse=self.sparse_mode,
+                         sparse_threshold=self.sparse_threshold,
+                         max_events=self.sparse_max_events,
+                         k_cap=self.sparse_k_cap)
         i_exc_t = synapse.synaptic_current_window(
             syn.weights[..., 0::2, :], syn.addresses[..., 0::2, :],
             eff_t[..., 0::2], row_addr_t[..., 0::2], gain,
-            impl=self.kernel_impl, const_addr=self.const_addr)
+            impl=self.kernel_impl, const_addr=self.const_addr, **sparse_kw)
         i_inh_t = synapse.synaptic_current_window(
             syn.weights[..., 1::2, :], syn.addresses[..., 1::2, :],
             eff_t[..., 1::2], row_addr_t[..., 1::2], gain,
-            impl=self.kernel_impl, const_addr=self.const_addr)
+            impl=self.kernel_impl, const_addr=self.const_addr, **sparse_kw)
         # current scaling vectorized over the whole window, not per step
         return new_stp, i_exc_t * 60.0, i_inh_t * 60.0
 

@@ -1,0 +1,147 @@
+"""Compact event streams for the event-sparse synaptic path.
+
+The chip is event-driven: synapse drivers forward address-matched events,
+and the silicon verification budgets the event bus at ~0.4M events/s
+(fig8 reproduces ~0.4M events/s on the software path). The dense
+emulation nevertheless pays the full [T, R] x [R, C] matmul per window
+even when almost no rows fired. This module is the packing layer of the
+sparse backend (``repro.kernels.synray_sparse``): a window's [T, R] row
+events + per-row event addresses become a compact fixed-capacity stream
+of ``(t, row, addr, efficacy)`` records — the software analogue of the
+packed event frames SpikeHard's ``dma_controller.v`` streams.
+
+Everything here jits: the capacity ``max_events`` is static and a
+validity mask marks the live records. Records are t-major (sorted by
+timestep, rows ascending within a step) — the order the event bus would
+deliver them, and the order the sparse kernels rely on for bit-exact
+accumulation against the dense matmul. ``n_events`` keeps the TRUE
+event count even when it exceeds the capacity, so callers can detect
+overflow and fall back to the dense path (``synapse.
+synaptic_current_window(sparse="auto")`` does exactly that); a stream
+packed over capacity silently DROPS the tail records — forcing the
+sparse path without the fallback is a broken promise, proven divergent
+by the contract test in ``tests/test_sparse.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+
+class EventStream(NamedTuple):
+    """Fixed-capacity window event stream (capacity E = ``t.shape[-1]``)."""
+    t: jnp.ndarray         # [E] int32 timestep of each record
+    row: jnp.ndarray       # [E] int32 driver row carrying the event
+    addr: jnp.ndarray      # [E] int32 6-bit source address of the event
+    eff: jnp.ndarray       # [E] float32 STP efficacy forwarded with it
+    valid: jnp.ndarray     # [E] bool   live-record mask
+    n_events: jnp.ndarray  # [] int32   TRUE count (may exceed capacity)
+
+    @property
+    def capacity(self) -> int:
+        return self.t.shape[-1]
+
+
+def pack_events(row_events_t, event_addr_t, max_events: int) -> EventStream:
+    """[T, R] events (0 = silent, else efficacy) -> t-major EventStream.
+
+    ``max_events`` is the static stream capacity. Records beyond it are
+    dropped (``n_events`` still reports the true count — check
+    ``overflowed`` before trusting a forced-sparse result).
+    """
+    T, R = row_events_t.shape
+    flat_eff = row_events_t.reshape(-1).astype(jnp.float32)
+    flat_addr = event_addr_t.reshape(-1).astype(jnp.int32)
+    fired = flat_eff != 0.0
+    # t-major ordinal of every fired slot; silent slots and the overflow
+    # tail land on index E (out of bounds -> dropped by the scatters)
+    ordinal = jnp.cumsum(fired.astype(jnp.int32)) - 1
+    n = jnp.sum(fired.astype(jnp.int32))
+    dst = jnp.where(fired & (ordinal < max_events), ordinal, max_events)
+    src = jnp.arange(T * R, dtype=jnp.int32)
+    z = jnp.zeros((max_events,), jnp.int32)
+    t = z.at[dst].set(src // R, mode="drop")
+    row = z.at[dst].set(src % R, mode="drop")
+    addr = z.at[dst].set(flat_addr, mode="drop")
+    eff = jnp.zeros((max_events,), jnp.float32).at[dst].set(flat_eff,
+                                                            mode="drop")
+    valid = jnp.arange(max_events, dtype=jnp.int32) < n
+    return EventStream(t=t, row=row, addr=addr, eff=eff, valid=valid,
+                       n_events=n)
+
+
+def unpack_events(stream: EventStream, T: int, R: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inverse of ``pack_events`` (up to dropped overflow records).
+
+    Returns ``(row_events_t, event_addr_t)``: efficacies scattered back
+    onto the [T, R] grid, and the event addresses at fired slots (silent
+    slots carry address 0 — the stream only transports addresses WITH
+    events, exactly like the hardware bus).
+    """
+    dst = jnp.where(stream.valid, stream.t * R + stream.row, T * R)
+    ev = jnp.zeros((T * R,), jnp.float32).at[dst].set(stream.eff,
+                                                      mode="drop")
+    ad = jnp.zeros((T * R,), jnp.int32).at[dst].set(stream.addr,
+                                                    mode="drop")
+    return ev.reshape(T, R), ad.reshape(T, R)
+
+
+def overflowed(stream: EventStream) -> jnp.ndarray:
+    """True when the window produced more events than the capacity."""
+    return stream.n_events > stream.capacity
+
+
+def window_stats(row_events_t) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(worst per-instance event count, worst per-instance-step count) of
+    a [T, .., R] window — the quantities the density auto-switch gates on.
+    Each instance of the prefix packs its own capacity-``max_events``
+    stream, so the gate must hold for the worst instance."""
+    fired = (row_events_t != 0.0).astype(jnp.int32)
+    per_step = jnp.sum(fired, axis=-1)          # [T, ..]
+    return jnp.max(jnp.sum(per_step, axis=0)), jnp.max(per_step)
+
+
+def regroup_events(stream: EventStream, T: int, k_cap: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Stream -> per-step [T, K] record grid (K = ``k_cap`` static).
+
+    ``rows_tk/addr_tk/eff_tk``: slot k of step t holds that step's k-th
+    event (row-ascending, the stream order); empty slots carry
+    ``eff == 0`` so they contribute exactly nothing to the gathered
+    reduction. Steps with more than ``k_cap`` events drop the tail —
+    the same broken-promise regime as stream overflow, and gated by the
+    same auto-switch fallback.
+    """
+    e = jnp.arange(stream.capacity, dtype=jnp.int32)
+    seg = jnp.where(stream.valid, stream.t, T)
+    counts = jnp.zeros((T + 1,), jnp.int32).at[seg].add(1)
+    offset = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts[:-1])])
+    slot = e - offset[jnp.clip(stream.t, 0, T)]
+    dst = jnp.where(stream.valid & (slot < k_cap),
+                    stream.t * k_cap + slot, T * k_cap)
+    zi = jnp.zeros((T * k_cap,), jnp.int32)
+    rows_tk = zi.at[dst].set(stream.row, mode="drop").reshape(T, k_cap)
+    addr_tk = zi.at[dst].set(stream.addr, mode="drop").reshape(T, k_cap)
+    eff_tk = jnp.zeros((T * k_cap,), jnp.float32).at[dst].set(
+        stream.eff, mode="drop").reshape(T, k_cap)
+    return rows_tk, addr_tk, eff_tk
+
+
+def default_max_events(T: int, R: int, threshold: float) -> int:
+    """Stream capacity implied by a density threshold: the auto-switch
+    takes the sparse path only while the window fits, so the capacity IS
+    the density gate (rounded up to a lane-friendly multiple of 8)."""
+    cap = int(math.ceil(threshold * T * R))
+    return max(32, min(T * R, ((cap + 7) // 8) * 8))
+
+
+def default_k_cap(R: int, threshold: float) -> int:
+    """Per-step record capacity: sized for a Bernoulli(threshold) row
+    census with generous Poisson headroom, so sub-threshold windows
+    essentially never overflow a single step."""
+    cap = int(math.ceil(4.0 * threshold * R)) + 4
+    return max(8, min(R, ((cap + 3) // 4) * 4))

@@ -77,7 +77,8 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                     instance_key=None, prefix=(), backend: str = "auto",
                     kernel_impl: str = "auto", rule_impl: str = "python",
                     vm_executor: str = "auto", block_size: int = None,
-                    trace_block: int = None, kernel_block: int = None):
+                    trace_block: int = None, kernel_block: int = None,
+                    sparse_mode: str = None, sparse_threshold: float = None):
     """Build the experiment closure set. Returns (init_fn, trial_fn, meta).
 
     The machine uses 2 rows per input (exc/inh pair, Dale's law: the PPU
@@ -91,7 +92,10 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     ``trace_block`` / ``kernel_block`` override the blocked backend's
     time-block lengths (CPU membrane slab, current-trace slab, TPU
     kernel block; whole-experiment scans compose with any block size —
-    T need not divide).
+    T need not divide). ``sparse_mode``/``sparse_threshold`` control the
+    event-sparse synaptic path ("auto"/"never"/"always" and its density
+    gate — bit-identical output either way, see
+    ``synapse.synaptic_current_window``).
 
     ``rule_impl`` selects how the §5 learning rule executes:
       "python"  the rule is the ``_signed_rule`` Python callable (default);
@@ -128,7 +132,8 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     # the address-match mask once per trial
     block_kw = {k: v for k, v in dict(
         block_size=block_size, trace_block=trace_block,
-        kernel_block=kernel_block).items() if v is not None}
+        kernel_block=kernel_block, sparse_mode=sparse_mode,
+        sparse_threshold=sparse_threshold).items() if v is not None}
     core = AnnCore(cfg, inst, backend=backend, kernel_impl=kernel_impl,
                    const_addr=True, **block_kw)
     ppu = VectorUnit(cfg, inst)
@@ -321,7 +326,8 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                  scan: bool = None, backend: str = "auto",
                  rule_impl: str = "python", vm_executor: str = "auto",
                  block_size: int = None, trace_block: int = None,
-                 kernel_block: int = None):
+                 kernel_block: int = None, sparse_mode: str = None,
+                 sparse_threshold: float = None):
     """Full §5 experiment. Returns the metrics history (stacked).
 
     Modes:
@@ -337,7 +343,9 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                                         vm_executor=vm_executor,
                                         block_size=block_size,
                                         trace_block=trace_block,
-                                        kernel_block=kernel_block)
+                                        kernel_block=kernel_block,
+                                        sparse_mode=sparse_mode,
+                                        sparse_threshold=sparse_threshold)
     state = init(jax.random.PRNGKey(seed + 1))
     stims = jnp.asarray(np.resize([1, 2, 0], n_trials), jnp.int32)
     if scan is None:

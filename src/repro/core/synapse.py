@@ -17,6 +17,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import events
+
 WMAX = 63  # 6-bit
 
 
@@ -45,26 +47,23 @@ def synaptic_current(weights, addresses, row_events, event_addr, gain):
     return i * gain
 
 
-def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
-                            gain, impl: str = "auto",
-                            const_addr: bool = False):
-    """Whole-window synaptic currents: [T, ..., R] events -> [T, ..., C].
+# Density below which "auto" routes a window through the event-sparse
+# path. The measured dense/sparse crossover on the CPU container sits
+# between 50% and 100% density (BENCH_pr6_sparse.json: 1.24x at p=0.5,
+# 0.67x at p=1.0), but the default capacities scale with the threshold
+# and the static sparse cost is O(T * k_cap * C) — 0.05 keeps that well
+# under the dense work while covering the ~4-5x regime at p <= 5%.
+SPARSE_THRESHOLD = 0.05
+# Static work floor (T * R * C MACs): below it the dense matmul is so
+# cheap that packing overhead and the runtime branch can never pay off,
+# so sparse="auto" compiles to the pure dense program (keeps e.g. the
+# 16 x 16 §5 experiment byte-for-byte the same program as before).
+SPARSE_MIN_DENSE_WORK = 2 * 1024 * 1024
 
-    Weights and addresses are constant between PPU writes, so the per-step
-    masked matmul collapses into ONE time-batched event x weight matmul:
-    time becomes the batch axis of the ``repro.kernels.synray`` Pallas
-    kernel (address matching stays in-kernel, so per-step event addresses
-    remain fully general). On CPU the broadcasting jnp oracle runs instead.
-    A leading instance prefix on ``weights`` maps onto the kernel's
-    instance grid axis (one launch for the whole fleet — see
-    ``repro.kernels``); the oracle broadcasts natively.
 
-    ``const_addr=True`` asserts the event address on each row is the same
-    at every step of the window (true whenever each driver row carries a
-    single source, e.g. the §5 experiment). The address-match mask is then
-    resolved ONCE into an effective weight matrix and the whole window is
-    a plain [T, R] x [R, C] matmul — no [T, R, C] mask materialization.
-    """
+def _dense_window(weights, addresses, row_events_t, event_addr_t, gain,
+                  impl, const_addr, bb):
+    """The dense whole-window path (kernel or broadcasting oracle)."""
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
@@ -84,17 +83,148 @@ def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
                                unfold_instance_time)
     from repro.kernels.synray import ops as synray_ops
 
-    # time is the kernel's batch axis; pick the largest batch block that
-    # divides the (static) window length
+    # time is the kernel's batch axis; pad the window up to the batch
+    # block instead of shrinking the block to a divisor of T (the old
+    # ``next(d for d in (8, 4, 2, 1) ...)`` silently degraded to bb=1 for
+    # any odd T). Batch rows are independent, so zero-event pad steps are
+    # exact and sliced off after the call.
     T = row_events_t.shape[0]
-    bb = next(d for d in (8, 4, 2, 1) if T % d == 0)
+    if bb is None:
+        bb = min(8, T)
+    pad = -T % bb
+    if pad:
+        row_events_t = jnp.concatenate(
+            [row_events_t,
+             jnp.zeros((pad, *row_events_t.shape[1:]),
+                       row_events_t.dtype)], axis=0)
+        event_addr_t = jnp.concatenate(
+            [event_addr_t,
+             jnp.zeros((pad, *event_addr_t.shape[1:]),
+                       event_addr_t.dtype)], axis=0)
     prefix = weights.shape[:-2]
     i = synray_ops.synaptic_current(
         fold_instance_time(row_events_t.astype(jnp.float32), 1),
         fold_instance_time(event_addr_t, 1),
         fold_instance(weights, 2), fold_instance(addresses, 2),
         impl=impl, bb=bb)
+    i = unfold_instance_time(i, prefix)
+    if pad:
+        i = i[:T]
+    return i * gain
+
+
+def _sparse_window(weights, addresses, row_events_t, event_addr_t, gain,
+                   impl, max_events, k_cap):
+    """The event-sparse whole-window path (repro.kernels.synray_sparse).
+
+    Packs the window into the compact event stream and gather-accumulates
+    only fired rows — BIT-identical to the dense path as long as the
+    window fits the static capacities (overflow drops records; the
+    ``sparse="auto"`` gate in ``synaptic_current_window`` guarantees the
+    fit before routing here)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    from repro.kernels import (fold_instance, fold_instance_time,
+                               unfold_instance_time)
+    from repro.kernels.synray_sparse import ops as sparse_ops
+
+    prefix = weights.shape[:-2]
+    i = sparse_ops.synaptic_current_sparse(
+        fold_instance_time(row_events_t.astype(jnp.float32), 1),
+        fold_instance_time(event_addr_t, 1),
+        fold_instance(weights, 2), fold_instance(addresses, 2),
+        max_events=max_events, k_cap=k_cap, impl=impl)
     return unfold_instance_time(i, prefix) * gain
+
+
+def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
+                            gain, impl: str = "auto",
+                            const_addr: bool = False,
+                            sparse: str = "auto",
+                            sparse_threshold: float = None,
+                            max_events: int = None, k_cap: int = None,
+                            bb: int = None):
+    """Whole-window synaptic currents: [T, ..., R] events -> [T, ..., C].
+
+    Weights and addresses are constant between PPU writes, so the per-step
+    masked matmul collapses into ONE time-batched event x weight matmul:
+    time becomes the batch axis of the ``repro.kernels.synray`` Pallas
+    kernel (address matching stays in-kernel, so per-step event addresses
+    remain fully general). On CPU the broadcasting jnp oracle runs instead.
+    A leading instance prefix on ``weights`` maps onto the kernel's
+    instance grid axis (one launch for the whole fleet — see
+    ``repro.kernels``); the oracle broadcasts natively.
+
+    ``const_addr=True`` asserts the event address on each row is the same
+    at every step of the window (true whenever each driver row carries a
+    single source, e.g. the §5 experiment). The address-match mask is then
+    resolved ONCE into an effective weight matrix and the whole window is
+    a plain [T, R] x [R, C] matmul — no [T, R, C] mask materialization.
+
+    The machine is event-driven, and at low firing rates the dense matmul
+    does orders of magnitude more MACs than the events justify. ``sparse``
+    selects the event-sparse path (``repro.kernels.synray_sparse``: pack
+    the window into a compact event stream, gather-accumulate only fired
+    rows — BIT-identical to the dense path by the in-order-FMA argument in
+    its ref.py):
+
+      "auto"    (default) route through sparse when the window provably
+                fits the event capacities — a runtime ``lax.cond`` on the
+                measured event census, so overflow NEVER drops records (it
+                falls back to dense). Windows below the static
+                ``SPARSE_MIN_DENSE_WORK`` floor compile to the pure dense
+                program with zero switch overhead.
+      "never"   always dense (the pre-sparse behavior).
+      "always"  force sparse — the caller promises the window fits
+                ``max_events``/``k_cap``; overflow silently drops events
+                (see tests/test_sparse.py's divergence contract).
+
+    ``sparse_threshold`` (default ``SPARSE_THRESHOLD``) sizes the default
+    capacities: ``max_events`` ~ threshold * T * R total records and
+    ``k_cap`` per-step records, both overridable. ``impl`` selects the
+    kernel implementation for whichever path runs (auto | pallas |
+    interpret | ref). As convenience aliases, ``impl="dense"`` /
+    ``impl="sparse"`` force the respective path with auto kernels.
+
+    ``bb`` overrides the dense kernel's time-batch block (default 8; T is
+    padded up with zero-event steps when it does not divide).
+    """
+    if impl == "dense":
+        impl, sparse = "auto", "never"
+    elif impl == "sparse":
+        impl, sparse = "auto", "always"
+    elif impl.startswith("sparse_"):
+        impl, sparse = impl[len("sparse_"):], "always"
+    if sparse not in ("auto", "never", "always"):
+        raise ValueError(f"unknown sparse mode {sparse!r}")
+
+    T = row_events_t.shape[0]
+    R = row_events_t.shape[-1]
+    C = weights.shape[-1]
+    if sparse == "auto" and T * R * C < SPARSE_MIN_DENSE_WORK:
+        sparse = "never"
+    if sparse == "never":
+        return _dense_window(weights, addresses, row_events_t,
+                             event_addr_t, gain, impl, const_addr, bb)
+
+    thr = SPARSE_THRESHOLD if sparse_threshold is None else sparse_threshold
+    if max_events is None:
+        max_events = events.default_max_events(T, R, thr)
+    if k_cap is None:
+        k_cap = events.default_k_cap(R, thr)
+    if sparse == "always":
+        return _sparse_window(weights, addresses, row_events_t,
+                              event_addr_t, gain, impl, max_events, k_cap)
+
+    n, kmax = events.window_stats(row_events_t)
+    fits = (n <= max_events) & (kmax <= k_cap)
+    return jax.lax.cond(
+        fits,
+        lambda: _sparse_window(weights, addresses, row_events_t,
+                               event_addr_t, gain, impl, max_events,
+                               k_cap),
+        lambda: _dense_window(weights, addresses, row_events_t,
+                              event_addr_t, gain, impl, const_addr, bb))
 
 
 def quantize_weight(w_float):

@@ -6,6 +6,13 @@ Three kernels, each with a pure-jnp oracle (ref.py) and a jit'd wrapper
 
   synray      event x 6-bit-weight synaptic-current matmul with in-kernel
               address matching (the synapse array's event path)
+  synray_sparse
+              the event-sparse twin of synray: gather-accumulates only
+              fired rows from a compact [T, K] record grid
+              (repro.core.events) — O(T*K*C) instead of O(T*R*C), and
+              BIT-identical to the dense path (see its ref.py);
+              auto-selected per window by measured event density in
+              ``synapse.synaptic_current_window(sparse="auto")``
   corr        T-step fused correlation-sensor update: decay + outer-product
               accumulation entirely in VMEM (T x fewer HBM round trips)
   ppu_update  the PPU vector-unit inner loop: CADC digitization ->

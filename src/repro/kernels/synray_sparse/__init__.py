@@ -1,0 +1,2 @@
+from repro.kernels.synray_sparse.ops import (  # noqa: F401
+    sparse_window, synaptic_current_sparse)
