@@ -35,6 +35,27 @@ def _time(f, *args, iters=20):
 
 
 def run():
+    """Executor ladder + in-scan comparison, with the specializer-cache
+    stats delta for the whole bench surfaced in the result (satellite of
+    the PR 7 observability work: a cache that silently thrashes shows up
+    as a specializer that silently got 64x slower)."""
+    from repro.obs.timing import CacheDelta, eviction_storm
+
+    with CacheDelta(warn=False) as cd:
+        res = _run_inner()
+    res["specialize_cache"] = dict(cd.delta)
+    storm = eviction_storm(cd.delta)
+    res["cache_eviction_storm"] = storm
+    print(f"specializer cache over this bench: {cd.delta['hits']} hits / "
+          f"{cd.delta['misses']} misses / {cd.delta['evictions']} "
+          f"evictions (size {cd.delta['size']}/{cd.delta['max_size']})")
+    if storm:
+        print("WARNING: eviction storm — the program working set exceeds "
+              "the LRU capacity; every upload re-specializes")
+    return res
+
+
+def _run_inner():
     from repro.configs.bss2 import BSS2
     from repro.core.anncore import AnnCore
     from repro.core.ppu import VectorUnit

@@ -8,6 +8,12 @@
   ppuvm                PPU-VM executor ladder (scan / specialized /
                        pallas) vs the fixed-function rule; the ladder is
                        emitted under ``executor_ladder`` in --json output
+                       (plus the specializer-cache hit/miss/eviction
+                       delta over the bench)
+  telemetry            observability overhead ladder: scanned training
+                       with the jit-safe counter pytree off vs on
+                       (paired-median), counter summary, phase split,
+                       and a run report under results/
   roofline             §Roofline table from the dry-run artifacts
 
 Usage:
@@ -18,49 +24,20 @@ across PRs); without it results are print-only.
 """
 import argparse
 import json
-import os
-import subprocess
 import sys
 import time
 import traceback
 
-
-def _host_header():
-    """Attribution header for BENCH_* trajectory files: which commit, which
-    accelerator, and which AnnCore backend produced the numbers (ROADMAP
-    "bench trajectory discipline" — the files travel across machines)."""
-    try:
-        sha = subprocess.check_output(
-            ["git", "rev-parse", "HEAD"],
-            cwd=os.path.dirname(os.path.abspath(__file__)),
-            stderr=subprocess.DEVNULL).decode().strip()
-    except Exception:
-        sha = None
-    import jax
-    backend = jax.default_backend()
-    return dict(git_sha=sha, jax_backend=backend,
-                anncore_backend="blocked" if backend == "tpu" else "fused")
-
-
-def _jsonable(x):
-    """Best-effort conversion of numpy/jax scalars and containers."""
-    if isinstance(x, dict):
-        return {str(k): _jsonable(v) for k, v in x.items()}
-    if isinstance(x, (list, tuple)):
-        return [_jsonable(v) for v in x]
-    if hasattr(x, "item") and getattr(x, "ndim", 1) == 0:
-        return x.item()
-    if hasattr(x, "tolist"):
-        return x.tolist()
-    if isinstance(x, (int, float, str, bool)) or x is None:
-        return x
-    return repr(x)
+# provenance + serialization shared with the run-report subsystem: BENCH_*
+# trajectory files and results/REPORT_* carry the same header fields
+from repro.obs.report import host_header as _host_header
+from repro.obs.report import jsonable as _jsonable
 
 
 def main() -> None:
     from benchmarks import (fig4_calibration, fig8_event_interface,
                             fig11_rstdp, step_time, kernels_bench,
-                            ppuvm_bench, roofline_table)
+                            ppuvm_bench, roofline_table, telemetry_bench)
     suites = [
         ("fig4_calibration", fig4_calibration.run),
         ("fig8_event_interface", fig8_event_interface.run),
@@ -68,6 +45,7 @@ def main() -> None:
         ("step_time", step_time.run),
         ("kernels", kernels_bench.run),
         ("ppuvm", ppuvm_bench.run),
+        ("telemetry", telemetry_bench.run),
         ("roofline", roofline_table.run),
     ]
     ap = argparse.ArgumentParser()

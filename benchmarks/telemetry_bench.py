@@ -1,0 +1,125 @@
+"""Telemetry overhead ladder: scanned training with the counter pytree
+OFF vs ON.
+
+OFF must be free — the disabled program is the same jaxpr as before the
+telemetry subsystem existed (``None`` compiles out of the scan carry), so
+its step time belongs inside the noise band of the PR 6 ``step_time``
+scan rung. ON pays for the counter arithmetic riding the carry; that cost
+is the price of observability and gets its own ladder entry.
+
+Both programs are measured INTERLEAVED (alternating reps) and the
+overhead is the PAIRED-ratio median, the same shared-container noise
+discipline as ``step_time`` — sequential best-of lets one rung catch a
+quiet slice of the machine and fakes (or hides) an overhead.
+
+Also emitted: the ON run's counter summary, a phase-timing split of one
+emulation window (``repro.obs.timing.profile_phases``), the
+specializer-cache delta over the bench, and a full run report
+(``results/REPORT_telemetry_bench.{json,md}``).
+"""
+import time
+
+import jax
+import numpy as np
+
+
+REPEATS = 8   # best-of/paired repeats: CPU container timings are noisy
+N_TRIALS = 60
+
+
+def run():
+    import jax.numpy as jnp
+    from repro.core.hybrid import make_experiment, make_scanned_training
+    from repro.obs import report as obs_report
+    from repro.obs import trace as obs_trace
+    from repro.obs.timing import CacheDelta, profile_phases
+
+    with CacheDelta(warn=False) as cd:
+        init_off, _, meta_off = make_experiment(
+            instance_key=jax.random.PRNGKey(0))
+        init_on, _, meta_on = make_experiment(
+            instance_key=jax.random.PRNGKey(0), telemetry=True)
+        stims = jnp.asarray(np.resize([1, 2, 0], N_TRIALS), jnp.int32)
+
+        runs = [(make_scanned_training(meta_off["scanned_training"]),
+                 init_off),
+                (make_scanned_training(meta_on["scanned_training"]),
+                 init_on)]
+        final = [None, None]
+        for i, (scanned, init_fn) in enumerate(runs):  # warmup/compile
+            s, _ = scanned(init_fn(jax.random.PRNGKey(1)), stims)
+            jax.block_until_ready(s)
+            final[i] = s
+        samples = [[], []]
+        for _ in range(REPEATS):
+            for i, (scanned, init_fn) in enumerate(runs):
+                t0 = time.perf_counter()
+                s, hist = scanned(init_fn(jax.random.PRNGKey(1)), stims)
+                jax.block_until_ready((s, hist))
+                samples[i].append((time.perf_counter() - t0) / N_TRIALS)
+                final[i] = s
+        off_t, on_t = min(samples[0]), min(samples[1])
+        paired = sorted(b / a for a, b in zip(*samples))
+        overhead_paired = paired[len(paired) // 2]
+
+        # the ON run's counters — the report payload
+        tele = obs_trace.summary(final[1].tele)
+
+        # bit-exactness spot check rides the bench for free: same seeds,
+        # one program with counters, one without
+        w_match = bool(np.array_equal(np.asarray(final[0].w_signed),
+                                      np.asarray(final[1].w_signed)))
+
+        # phase attribution of one emulation window on the fused backend
+        core = meta_off["core"]
+        state0 = init_off(jax.random.PRNGKey(1))
+        ecfg = meta_off["ecfg"]
+        rng = np.random.default_rng(0)
+        T = ecfg.trial_steps if hasattr(ecfg, "trial_steps") else 256
+        ev = (rng.random((T, core.cfg.n_rows)) < 0.02).astype(np.float32)
+        ad = np.zeros((T, core.cfg.n_rows), np.int8)
+        phases = profile_phases(core, state0.core, ev, ad, iters=3)
+
+    res = dict(
+        name="telemetry",
+        telemetry_off_us=off_t * 1e6,
+        telemetry_on_us=on_t * 1e6,
+        overhead_x_paired=overhead_paired,
+        overhead_x_bestof=on_t / off_t,
+        bit_exact_on_off=w_match,
+        counters=tele,
+        phase_us={k: v["best_us"] for k, v in phases.items()},
+        specialize_cache=dict(cd.delta),
+    )
+
+    print("# telemetry overhead — scanned §5 training, counters off vs on")
+    print(f"off (PR 6 program)  : {off_t * 1e6:9.0f} us/trial")
+    print(f"on  (counter carry) : {on_t * 1e6:9.0f} us/trial")
+    print(f"overhead            : {overhead_paired:6.3f}x paired-median "
+          f"({on_t / off_t:.3f}x best-of)")
+    print(f"on/off bit-exact    : {w_match}")
+    print(f"counters: steps={tele['steps']} in={tele['in_events']} "
+          f"out={tele['out_spikes']} trials={tele['trials']} "
+          f"dense={tele['dense_windows']} sparse={tele['sparse_windows']} "
+          f"fallbacks={tele['overflow_fallbacks']}")
+    print("phase split (best us): "
+          + "  ".join(f"{k}={v['best_us']:.0f}" for k, v in phases.items()))
+
+    rep = obs_report.build_report(
+        "telemetry_bench", telemetry=tele, timings=phases,
+        cache=dict(cd.delta),
+        config=dict(n_trials=N_TRIALS, repeats=REPEATS, backend="fused"),
+        extra=dict(telemetry_off_us=res["telemetry_off_us"],
+                   telemetry_on_us=res["telemetry_on_us"],
+                   overhead_x_paired=overhead_paired))
+    import os
+    out_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           os.pardir, "results")
+    paths = obs_report.write_report(
+        rep, os.path.join(out_dir, "REPORT_telemetry_bench.json"))
+    print(f"report: {paths['json']}")
+    return res
+
+
+if __name__ == "__main__":
+    run()

@@ -94,6 +94,12 @@ class AnnCore:
     (see ``synapse.synaptic_current_window``). ``sparse_threshold`` /
     ``sparse_max_events`` / ``sparse_k_cap`` override the density gate
     and the static stream capacities.
+    ``telemetry``: when True, ``run`` threads a jit-safe
+    ``repro.obs.trace.Telemetry`` counter pytree (auto-initialized per
+    call unless the caller passes one) and returns it under
+    ``outputs["telemetry"]`` — spike/event totals plus the synaptic
+    routing decisions. Off (the default) compiles to the exact
+    pre-telemetry program; on/off outputs are bit-identical.
     """
 
     def __init__(self, cfg: BSS2Config, inst: Dict, backend: str = "auto",
@@ -101,7 +107,8 @@ class AnnCore:
                  block_size: int = 8, trace_block: int = 8,
                  kernel_block: int = 32, sparse_mode: str = "auto",
                  sparse_threshold: float = None,
-                 sparse_max_events: int = None, sparse_k_cap: int = None):
+                 sparse_max_events: int = None, sparse_k_cap: int = None,
+                 telemetry: bool = False):
         self.cfg = cfg
         self.inst = inst
         if backend == "auto":
@@ -119,6 +126,7 @@ class AnnCore:
         self.sparse_threshold = sparse_threshold
         self.sparse_max_events = sparse_max_events
         self.sparse_k_cap = sparse_k_cap
+        self.telemetry = telemetry
 
     def init_state(self, prefix=()) -> AnnCoreState:
         cfg = self.cfg
@@ -172,28 +180,41 @@ class AnnCore:
         return new_state, out_spikes
 
     def run(self, state: AnnCoreState, row_spikes_t, row_addr_t,
-            record_v: bool = False, unroll: Optional[int] = None):
+            record_v: bool = False, unroll: Optional[int] = None,
+            telemetry=None):
         """Integrate a [T, ..., R] event stream. Returns (state, outputs).
 
-        outputs: dict(spikes=[T, ..., C], v=[T, ..., C] if record_v)
+        outputs: dict(spikes=[T, ..., C], v=[T, ..., C] if record_v,
+                      telemetry=Telemetry if threading telemetry)
 
         ``unroll=None`` picks the backend default: 1 for the oracle (the
         literal reference), 4 for the fused path (its dt-scan body is
         [.., C]-tiny, so moderate unrolling amortizes loop overhead;
         measured best on the CPU container, larger factors only grow the
         compiled loop body past cache).
+
+        ``telemetry``: pass a ``Telemetry`` pytree to accumulate into it
+        (the training scan threads it through the carry); ``None``
+        auto-initializes a fresh one iff the core was built with
+        ``telemetry=True``, else telemetry is off and the emitted program
+        is identical to the pre-telemetry one.
         """
+        from repro.obs import trace as obs_trace
+        if telemetry is None and self.telemetry:
+            telemetry = obs_trace.init_telemetry()
         if self.backend == "oracle":
             return self._run_oracle(state, row_spikes_t, row_addr_t,
-                                    record_v=record_v, unroll=unroll or 1)
-        if self.backend == "blocked":
-            return self._run_blocked(state, row_spikes_t, row_addr_t,
-                                     record_v=record_v, unroll=unroll or 4)
-        return self._run_fused(state, row_spikes_t, row_addr_t,
-                               record_v=record_v, unroll=unroll or 4)
+                                    record_v=record_v, unroll=unroll or 1,
+                                    telemetry=telemetry)
+        return self._run_windowed(state, row_spikes_t, row_addr_t,
+                                  record_v=record_v, unroll=unroll or 4,
+                                  telemetry=telemetry)
 
     def _run_oracle(self, state: AnnCoreState, row_spikes_t, row_addr_t,
-                    record_v: bool = False, unroll: int = 1):
+                    record_v: bool = False, unroll: int = 1,
+                    telemetry=None):
+        from repro.obs import trace as obs_trace
+
         def body(s, xs):
             sp, ad = xs
             s2, out = self.step(s, sp, ad)
@@ -205,10 +226,14 @@ class AnnCore:
         out = dict(spikes=recs[0])
         if record_v:
             out["v"] = recs[1]
+        if telemetry is not None:
+            # the oracle routes every step through the per-dt dense matmul
+            out["telemetry"] = obs_trace.count_run(
+                telemetry, row_spikes_t, recs[0])
         return state, out
 
     def _window_currents(self, state: AnnCoreState, row_spikes_t,
-                         row_addr_t, unroll: int):
+                         row_addr_t, unroll: int, telemetry=None):
         """Phases 1+2 shared by the fused and blocked backends: the STP
         efficacy trajectory (a cheap [.., R]-wide scan) and the whole
         window's synaptic currents as ONE time-batched event x weight
@@ -244,21 +269,71 @@ class AnnCore:
         i_exc_t = synapse.synaptic_current_window(
             syn.weights[..., 0::2, :], syn.addresses[..., 0::2, :],
             eff_t[..., 0::2], row_addr_t[..., 0::2], gain,
-            impl=self.kernel_impl, const_addr=self.const_addr, **sparse_kw)
+            impl=self.kernel_impl, const_addr=self.const_addr,
+            telemetry=telemetry, **sparse_kw)
+        if telemetry is not None:
+            i_exc_t, telemetry = i_exc_t
         i_inh_t = synapse.synaptic_current_window(
             syn.weights[..., 1::2, :], syn.addresses[..., 1::2, :],
             eff_t[..., 1::2], row_addr_t[..., 1::2], gain,
-            impl=self.kernel_impl, const_addr=self.const_addr, **sparse_kw)
+            impl=self.kernel_impl, const_addr=self.const_addr,
+            telemetry=telemetry, **sparse_kw)
+        if telemetry is not None:
+            i_inh_t, telemetry = i_inh_t
         # current scaling vectorized over the whole window, not per step
-        return new_stp, i_exc_t * 60.0, i_inh_t * 60.0
+        return new_stp, i_exc_t * 60.0, i_inh_t * 60.0, telemetry
 
-    def _finish_window(self, state, new_stp, new_neuron, rate_counters,
-                       row_spikes_t, recs, record_v):
-        """Phase 4 shared by fused/blocked: correlation hoisted out of the
-        scan — sensors never feed back into the dynamics within a window,
-        so one fused kernel call replays the whole T-window per VMEM
-        tile."""
+    def _neuron_window(self, neuron, rate_counters, i_exc_t, i_inh_t,
+                       record_v: bool, unroll: int):
+        """Phase 3: membrane integration over the pre-fused currents —
+        the neuron-only dt scan (fused) or the time-blocked window
+        (blocked: a whole block per step, VMEM-resident in the Pallas
+        kernel, packed-carry block scan on CPU). Returns
+        ``(new_neuron, rate_counters, recs)``."""
         cfg = self.cfg
+        if self.backend == "blocked":
+            from repro.kernels.neuron_scan import ops as neuron_ops
+            return neuron_ops.neuron_window(
+                neuron, rate_counters, i_exc_t, i_inh_t,
+                self.inst["neuron_params"], dt=cfg.dt,
+                use_adex=cfg.neuron.adex, impl=self.kernel_impl,
+                block=self.block_size, trace_block=self.trace_block,
+                kernel_block=self.kernel_block, record_v=record_v)
+
+        # fused: O(C) per step with the time-invariant decay factors
+        # hoisted out of the loop
+        dt, inst = cfg.dt, self.inst
+        decays = adex.decay_factors(inst["neuron_params"], dt)
+
+        def body(carry, xs):
+            n, rc = carry
+            ie, ii = xs
+            n2, out = adex.step(n, ie, ii, inst["neuron_params"], dt,
+                                adex=cfg.neuron.adex, decays=decays)
+            rec = (out, n2.v) if record_v else (out,)
+            return (n2, rc + out), rec
+
+        (new_neuron, rate_counters), recs = jax.lax.scan(
+            body, (neuron, rate_counters), (i_exc_t, i_inh_t),
+            unroll=unroll)
+        return new_neuron, rate_counters, recs
+
+    def _run_windowed(self, state: AnnCoreState, row_spikes_t, row_addr_t,
+                      record_v: bool = False, unroll: int = 1,
+                      telemetry=None):
+        """The fused/blocked pipeline: window currents (phases 1+2) ->
+        neuron window (phase 3) -> hoisted correlation window (phase 4:
+        sensors never feed back into the dynamics within a window, so one
+        fused kernel call replays the whole T-window per VMEM tile).
+        ``repro.obs.timing.profile_phases`` times these same phase
+        methods individually."""
+        from repro.obs import trace as obs_trace
+        cfg = self.cfg
+        new_stp, i_exc_t, i_inh_t, telemetry = self._window_currents(
+            state, row_spikes_t, row_addr_t, unroll, telemetry)
+        new_neuron, rate_counters, recs = self._neuron_window(
+            state.neuron, state.rate_counters, i_exc_t, i_inh_t,
+            record_v, unroll)
         out_spikes_t = recs[0]
         new_corr = correlation.window(
             state.corr, row_spikes_t, out_spikes_t,
@@ -270,50 +345,7 @@ class AnnCore:
         out = dict(spikes=out_spikes_t)
         if record_v:
             out["v"] = recs[1]
+        if telemetry is not None:
+            out["telemetry"] = obs_trace.count_run(
+                telemetry, row_spikes_t, out_spikes_t)
         return new_state, out
-
-    def _run_blocked(self, state: AnnCoreState, row_spikes_t, row_addr_t,
-                     record_v: bool = False, unroll: int = 1):
-        from repro.kernels.neuron_scan import ops as neuron_ops
-        new_stp, i_exc_t, i_inh_t = self._window_currents(
-            state, row_spikes_t, row_addr_t, unroll)
-
-        # 3. Time-blocked neuron window instead of the per-dt scan: the
-        #    state advances a whole block per step (VMEM-resident in the
-        #    Pallas kernel, packed-carry block scan on CPU).
-        new_neuron, rate_counters, recs = neuron_ops.neuron_window(
-            state.neuron, state.rate_counters, i_exc_t, i_inh_t,
-            self.inst["neuron_params"], dt=self.cfg.dt,
-            use_adex=self.cfg.neuron.adex, impl=self.kernel_impl,
-            block=self.block_size, trace_block=self.trace_block,
-            kernel_block=self.kernel_block, record_v=record_v)
-        return self._finish_window(state, new_stp, new_neuron,
-                                   rate_counters, row_spikes_t, recs,
-                                   record_v)
-
-    def _run_fused(self, state: AnnCoreState, row_spikes_t, row_addr_t,
-                   record_v: bool = False, unroll: int = 1):
-        cfg = self.cfg
-        dt = cfg.dt
-        inst = self.inst
-        new_stp, i_exc_t, i_inh_t = self._window_currents(
-            state, row_spikes_t, row_addr_t, unroll)
-
-        # 3. The remaining dt scan is neuron-only: O(C) per step; the
-        #    time-invariant decay factors are hoisted out of the loop.
-        decays = adex.decay_factors(inst["neuron_params"], dt)
-
-        def body(carry, xs):
-            neuron, rc = carry
-            ie, ii = xs
-            n2, out = adex.step(neuron, ie, ii, inst["neuron_params"], dt,
-                                adex=cfg.neuron.adex, decays=decays)
-            rec = (out, n2.v) if record_v else (out,)
-            return (n2, rc + out), rec
-
-        (new_neuron, rate_counters), recs = jax.lax.scan(
-            body, (state.neuron, state.rate_counters), (i_exc_t, i_inh_t),
-            unroll=unroll)
-        return self._finish_window(state, new_stp, new_neuron,
-                                   rate_counters, row_spikes_t, recs,
-                                   record_v)

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,7 @@ from repro.configs.bss2 import BSS2Config, BSS2
 from repro.core import rules, synapse
 from repro.core.anncore import AnnCore, AnnCoreState
 from repro.core.ppu import VectorUnit
+from repro.obs import trace as obs_trace
 from repro.verif.mismatch import sample_instance
 
 
@@ -58,6 +59,10 @@ class ExperimentState(NamedTuple):
     w_signed: jnp.ndarray         # PPU-resident signed weights [.., I, C]
     mean_reward: jnp.ndarray      # [.., C]
     key: jnp.ndarray
+    tele: Any = None              # obs.trace.Telemetry counters (None=off;
+    #                               an empty pytree slot, so disabled runs
+    #                               compile to the exact pre-telemetry
+    #                               program)
 
 
 def _patterns(ecfg: RSTDPConfig) -> Tuple[np.ndarray, np.ndarray]:
@@ -78,7 +83,8 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                     kernel_impl: str = "auto", rule_impl: str = "python",
                     vm_executor: str = "auto", block_size: int = None,
                     trace_block: int = None, kernel_block: int = None,
-                    sparse_mode: str = None, sparse_threshold: float = None):
+                    sparse_mode: str = None, sparse_threshold: float = None,
+                    telemetry: bool = False):
     """Build the experiment closure set. Returns (init_fn, trial_fn, meta).
 
     The machine uses 2 rows per input (exc/inh pair, Dale's law: the PPU
@@ -115,6 +121,14 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     fixed-point ops with zero interpreter dispatch. All executors are
     bit-identical (tests/test_ppuvm_fuzz.py), so this is purely a
     performance axis.
+
+    ``telemetry``: carry a jit-safe ``repro.obs.trace.Telemetry`` counter
+    pytree through the training scan (``ExperimentState.tele``): spike /
+    event totals, sparse-gate decisions and overflow fallbacks, VM
+    saturation-rail hits, and the weight-update magnitude histogram.
+    Off (default) the slot is ``None`` — an empty pytree, the compiled
+    program is exactly the pre-telemetry one; on/off is bit-identical in
+    spikes/weights (telemetry only reads the existing dataflow).
     """
     if cfg is None:
         cfg = dataclasses.replace(
@@ -144,7 +158,8 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
         st = st._replace(syn=_write_signed(st.syn, w0))
         return ExperimentState(
             core=st, w_signed=w0,
-            mean_reward=jnp.zeros((*prefix, ecfg.n_neurons)), key=key)
+            mean_reward=jnp.zeros((*prefix, ecfg.n_neurons)), key=key,
+            tele=obs_trace.init_telemetry() if telemetry else None)
 
     def _write_signed(syn, w_signed):
         w_exc = jnp.clip(w_signed, 0, None)
@@ -198,7 +213,7 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     elif rule_impl != "python":
         raise ValueError(f"unknown rule_impl {rule_impl!r}")
 
-    def _vm_signed_update(cs, state, reward, k_rule):
+    def _vm_signed_update(cs, state, reward, k_rule, tele):
         """§5 rule with the vector part as a PPU-VM program: the program
         computes the per-row dw readout (register 0); the scalar core
         applies it to the PPU-resident signed float weights, adds the xi
@@ -207,6 +222,7 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
         mod = jnp.stack([reward - state.mean_reward, reward], axis=0)
         cs2, regs = ppu.run_program(cs, _dw_words, mod=mod,
                                     executor=vm_executor)
+        tele = obs_trace.count_vm(tele, regs)
         dw = regs[0][..., 0::2, :].astype(jnp.float32) / _visa.ONE
         key, sub = jax.random.split(k_rule)
         xi = ecfg.noise * jax.random.normal(sub, state.w_signed.shape)
@@ -215,27 +231,32 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
             reward - state.mean_reward)                         # Eq. 2
         cs2 = cs2._replace(syn=_write_signed(cs2.syn, w_signed))
         obs = dict(causal=qc, acausal=qa)
-        return cs2, dict(mean_reward=mean_r, w_signed=w_signed), obs
+        return cs2, dict(mean_reward=mean_r, w_signed=w_signed), obs, tele
 
     def _trial_with(state, stim, ev, addr, k_rule, key_next):
         """Trial body given pregenerated events + keys (shared between the
         per-trial dispatch path and the whole-experiment scan)."""
-        cs, _ = core.run(state.core, ev, addr)
+        cs, core_out = core.run(state.core, ev, addr, telemetry=state.tele)
+        tele = core_out.get("telemetry")
         rates = cs.rate_counters
         r = _reward(rates, stim)
+        tele = obs_trace.count_trial(tele, rates)
 
         # PPU: R-STDP on the signed PPU weights, using exc-row eligibility
         if rule_impl == "vm":
-            cs2, rule_state, obs = _vm_signed_update(cs, state, r, k_rule)
+            cs2, rule_state, obs, tele = _vm_signed_update(
+                cs, state, r, k_rule, tele)
         else:
             cs2, rule_state, obs = ppu.apply_rule(
                 _signed_rule, cs,
                 dict(mean_reward=state.mean_reward, key=k_rule,
                      w_signed=state.w_signed),
                 reward=r)
+        tele = obs_trace.count_dw(tele, state.w_signed,
+                                  rule_state["w_signed"])
         new = ExperimentState(core=cs2, w_signed=rule_state["w_signed"],
                               mean_reward=rule_state["mean_reward"],
-                              key=key_next)
+                              key=key_next, tele=tele)
         elig = (obs["causal"][..., 0::2, :]
                 - obs["acausal"][..., 0::2, :]).astype(jnp.float32) / 255.0
         metrics = dict(reward=r, mean_reward=rule_state["mean_reward"],
@@ -327,7 +348,7 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                  rule_impl: str = "python", vm_executor: str = "auto",
                  block_size: int = None, trace_block: int = None,
                  kernel_block: int = None, sparse_mode: str = None,
-                 sparse_threshold: float = None):
+                 sparse_threshold: float = None, telemetry: bool = False):
     """Full §5 experiment. Returns the metrics history (stacked).
 
     Modes:
@@ -336,6 +357,10 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                               (the host-dispatch baseline)
       fused=False             host-in-the-loop: observables cross the host
                               boundary every trial (the slow path §5 kills)
+
+    ``telemetry=True`` threads the jit-safe counter pytree through the
+    whole run (bit-identical metrics either way) and returns the host
+    summary under ``out["telemetry"]``.
     """
     init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg,
                                         instance_key=jax.random.PRNGKey(seed),
@@ -345,7 +370,8 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                                         trace_block=trace_block,
                                         kernel_block=kernel_block,
                                         sparse_mode=sparse_mode,
-                                        sparse_threshold=sparse_threshold)
+                                        sparse_threshold=sparse_threshold,
+                                        telemetry=telemetry)
     state = init(jax.random.PRNGKey(seed + 1))
     stims = jnp.asarray(np.resize([1, 2, 0], n_trials), jnp.int32)
     if scan is None:
@@ -367,6 +393,8 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
         out = {k: np.stack([np.asarray(h[k]) for h in hist])
                for k in hist[0]}
     out["w_signed_final"] = np.asarray(state.w_signed)
+    if telemetry:
+        out["telemetry"] = obs_trace.summary(state.tele)
     return out, state, meta
 
 

@@ -143,7 +143,7 @@ def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
                             sparse: str = "auto",
                             sparse_threshold: float = None,
                             max_events: int = None, k_cap: int = None,
-                            bb: int = None):
+                            bb: int = None, telemetry=None):
     """Whole-window synaptic currents: [T, ..., R] events -> [T, ..., C].
 
     Weights and addresses are constant between PPU writes, so the per-step
@@ -188,7 +188,16 @@ def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
 
     ``bb`` overrides the dense kernel's time-batch block (default 8; T is
     padded up with zero-event steps when it does not divide).
+
+    ``telemetry`` threads an ``repro.obs.trace.Telemetry`` pytree (or
+    ``None`` = off): routing decisions are counted — static dense/sparse
+    routes, runtime census-gate outcomes, and capacity-overflow fallbacks
+    to dense (previously silent). With telemetry the return value is
+    ``(currents, telemetry)``; the currents themselves are untouched (the
+    counters only read the census the gate already computes), so on/off
+    stays bit-identical.
     """
+    from repro.obs import trace as obs_trace
     if impl == "dense":
         impl, sparse = "auto", "never"
     elif impl == "sparse":
@@ -204,8 +213,11 @@ def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
     if sparse == "auto" and T * R * C < SPARSE_MIN_DENSE_WORK:
         sparse = "never"
     if sparse == "never":
-        return _dense_window(weights, addresses, row_events_t,
-                             event_addr_t, gain, impl, const_addr, bb)
+        i = _dense_window(weights, addresses, row_events_t,
+                          event_addr_t, gain, impl, const_addr, bb)
+        if telemetry is None:
+            return i
+        return i, obs_trace.count_route(telemetry, sparse=False)
 
     thr = SPARSE_THRESHOLD if sparse_threshold is None else sparse_threshold
     if max_events is None:
@@ -213,18 +225,24 @@ def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
     if k_cap is None:
         k_cap = events.default_k_cap(R, thr)
     if sparse == "always":
-        return _sparse_window(weights, addresses, row_events_t,
-                              event_addr_t, gain, impl, max_events, k_cap)
+        i = _sparse_window(weights, addresses, row_events_t,
+                           event_addr_t, gain, impl, max_events, k_cap)
+        if telemetry is None:
+            return i
+        return i, obs_trace.count_route(telemetry, sparse=True)
 
     n, kmax = events.window_stats(row_events_t)
     fits = (n <= max_events) & (kmax <= k_cap)
-    return jax.lax.cond(
+    i = jax.lax.cond(
         fits,
         lambda: _sparse_window(weights, addresses, row_events_t,
                                event_addr_t, gain, impl, max_events,
                                k_cap),
         lambda: _dense_window(weights, addresses, row_events_t,
                               event_addr_t, gain, impl, const_addr, bb))
+    if telemetry is None:
+        return i
+    return i, obs_trace.count_gate(telemetry, fits, n, kmax)
 
 
 def quantize_weight(w_float):

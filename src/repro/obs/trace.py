@@ -1,0 +1,208 @@
+"""Jit-safe telemetry counters for the emulation stack.
+
+``Telemetry`` is a pytree of scalar counters (plus one fixed-size
+histogram) threaded through the training scan as part of the carry. The
+contract that makes it free when unused:
+
+  * OFF is ``None``. Every update helper returns ``None`` for ``None``
+    input without emitting a single op, so the disabled program is the
+    *same jaxpr* as before telemetry existed — zero overhead, zero
+    retrace risk, and trivially bit-identical outputs.
+  * ON is read-only on the existing dataflow: counters are derived from
+    values the emulation already computes (recorded spikes, the sparse
+    gate's event census, the VM's returned register file, the rule's
+    weight delta). No operand of the original math is touched, so
+    spikes/weights/VM state are bit-identical with telemetry on — the
+    invariant ``tests/test_obs.py`` asserts with ``assert_array_equal``
+    across the fused/blocked/oracle/sparse backends.
+  * Shapes are static. Counters are rank-0 ``int32``/``float32`` and the
+    weight-update histogram has a fixed bin count, so the pytree carries
+    through ``lax.scan`` unchanged regardless of network size, trial
+    count, or instance prefix (counters are fleet-wide totals).
+
+Counter catalogue (see README "Observability" for the full matrix):
+
+  steps / trials           integrated dt steps, completed PPU trials
+  in_events / out_spikes   nonzero driver events in, neuron spikes out
+  rate_total               sum of rate counters at PPU read time
+  dense_windows / sparse_windows
+                           synaptic-window routing decisions (static
+                           routes count too; one window call = one count)
+  gated_windows            windows that went through the runtime
+                           ``lax.cond`` census gate of ``sparse="auto"``
+  overflow_fallbacks       auto-gated windows whose event census did NOT
+                           fit the static stream capacities and fell back
+                           to dense — the previously *silent* PR 6 path
+  census_events_max / census_k_max
+                           worst window event count / per-step count the
+                           gate measured (capacity headroom indicator)
+  vm_runs / vm_sat_hits    PPU-VM program executions, and final register
+                           lanes resting on the Q8.8 saturation rails
+                           (0x7FFF / 0x8000 — fracsat clipping happened)
+  dw_updates / dw_abs_max / dw_hist
+                           weight-update count, largest |dw| (weight
+                           LSBs), and a fixed-bin |dw| magnitude
+                           histogram over all synapses and trials
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+# |dw| histogram bin edges in weight LSBs: bin 0 is "below one Q8.8 LSB"
+# (effectively unchanged), the rest are log2-spaced up to the ±45 clip
+# range of the §5 signed weights. searchsorted(E, x) -> bin index.
+DW_EDGES = np.asarray([1.0 / 256, 1.0 / 64, 1.0 / 16, 0.25, 0.5,
+                       1.0, 2.0, 4.0, 8.0, 16.0, 32.0], np.float32)
+DW_BINS = len(DW_EDGES) + 1
+
+_I32_FIELDS = ("steps", "trials", "in_events", "out_spikes",
+               "dense_windows", "sparse_windows", "gated_windows",
+               "overflow_fallbacks", "census_events_max", "census_k_max",
+               "vm_runs", "vm_sat_hits", "dw_updates")
+
+
+class Telemetry(NamedTuple):
+    steps: jnp.ndarray               # [] i32 integrated dt steps
+    trials: jnp.ndarray              # [] i32 completed trials
+    in_events: jnp.ndarray           # [] i32 nonzero input row events
+    out_spikes: jnp.ndarray          # [] i32 output spikes
+    rate_total: jnp.ndarray          # [] f32 rate counters at PPU reads
+    dense_windows: jnp.ndarray       # [] i32 windows routed dense
+    sparse_windows: jnp.ndarray      # [] i32 windows routed sparse
+    gated_windows: jnp.ndarray       # [] i32 runtime census-gated windows
+    overflow_fallbacks: jnp.ndarray  # [] i32 census overflow -> dense
+    census_events_max: jnp.ndarray   # [] i32 worst gated window events
+    census_k_max: jnp.ndarray        # [] i32 worst gated per-step events
+    vm_runs: jnp.ndarray             # [] i32 PPU-VM program executions
+    vm_sat_hits: jnp.ndarray         # [] i32 register lanes on the rails
+    dw_updates: jnp.ndarray          # [] i32 weight-update applications
+    dw_abs_max: jnp.ndarray          # [] f32 largest |dw| seen (LSBs)
+    dw_hist: jnp.ndarray             # [DW_BINS] i32 |dw| histogram
+
+
+def init_telemetry() -> Telemetry:
+    # one DISTINCT zero buffer per field: training donates the scan carry,
+    # and donation rejects the same buffer appearing twice in it
+    return Telemetry(
+        **{f: jnp.array(0, jnp.int32) for f in _I32_FIELDS},
+        rate_total=jnp.array(0.0, jnp.float32),
+        dw_abs_max=jnp.array(0.0, jnp.float32),
+        dw_hist=jnp.zeros((DW_BINS,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Update helpers — every one is the identity on None (telemetry OFF)
+# ---------------------------------------------------------------------------
+
+def count_run(tele: Optional[Telemetry], row_spikes_t, out_spikes_t
+              ) -> Optional[Telemetry]:
+    """One integrated window: dt steps, input events, output spikes.
+
+    Reads the window's *recorded* inputs/outputs (outside the dt scan),
+    so the emulation loop itself is untouched. Totals sum over any
+    instance prefix.
+    """
+    if tele is None:
+        return None
+    T = row_spikes_t.shape[0]
+    return tele._replace(
+        steps=tele.steps + jnp.int32(T),
+        in_events=tele.in_events
+        + jnp.count_nonzero(row_spikes_t).astype(jnp.int32),
+        out_spikes=tele.out_spikes
+        + jnp.sum(out_spikes_t).astype(jnp.int32))
+
+
+def count_route(tele: Optional[Telemetry], sparse: bool
+                ) -> Optional[Telemetry]:
+    """A *statically* routed synaptic window (no runtime gate): the
+    ``sparse="never"``/work-floor dense program or forced ``"always"``."""
+    if tele is None:
+        return None
+    if sparse:
+        return tele._replace(sparse_windows=tele.sparse_windows + 1)
+    return tele._replace(dense_windows=tele.dense_windows + 1)
+
+
+def count_gate(tele: Optional[Telemetry], fits, n_events, k_max
+               ) -> Optional[Telemetry]:
+    """One ``sparse="auto"`` census-gate decision: ``fits`` routed sparse,
+    ``~fits`` is a capacity-overflow fallback to dense (the event stream
+    would have dropped records — PR 6 took this branch silently)."""
+    if tele is None:
+        return None
+    took = fits.astype(jnp.int32)
+    return tele._replace(
+        gated_windows=tele.gated_windows + 1,
+        sparse_windows=tele.sparse_windows + took,
+        dense_windows=tele.dense_windows + (1 - took),
+        overflow_fallbacks=tele.overflow_fallbacks + (1 - took),
+        census_events_max=jnp.maximum(tele.census_events_max,
+                                      n_events.astype(jnp.int32)),
+        census_k_max=jnp.maximum(tele.census_k_max,
+                                 k_max.astype(jnp.int32)))
+
+
+def count_trial(tele: Optional[Telemetry], rate_counters
+                ) -> Optional[Telemetry]:
+    """One completed trial; ``rate_counters`` as read by the PPU (before
+    the post-read reset)."""
+    if tele is None:
+        return None
+    return tele._replace(
+        trials=tele.trials + 1,
+        rate_total=tele.rate_total
+        + jnp.sum(rate_counters).astype(jnp.float32))
+
+
+def count_vm(tele: Optional[Telemetry], regs) -> Optional[Telemetry]:
+    """One PPU-VM program execution: count final register lanes resting
+    on the Q8.8 fracsat rails (0x7FFF / 0x8000) — evidence that the
+    saturating arithmetic clipped. Reads the register file the executor
+    already returns, so every executor (numpy/scan/specialized/pallas)
+    reports identically."""
+    if tele is None:
+        return None
+    from repro.ppuvm import isa
+    on_rail = (regs == isa.I16MAX) | (regs == isa.I16MIN)
+    return tele._replace(
+        vm_runs=tele.vm_runs + 1,
+        vm_sat_hits=tele.vm_sat_hits
+        + jnp.count_nonzero(on_rail).astype(jnp.int32))
+
+
+def count_dw(tele: Optional[Telemetry], w_old, w_new
+             ) -> Optional[Telemetry]:
+    """One weight update: |dw| magnitude histogram over all synapses
+    (weight-LSB units; bin edges ``DW_EDGES``)."""
+    if tele is None:
+        return None
+    dw = jnp.abs(jnp.asarray(w_new, jnp.float32)
+                 - jnp.asarray(w_old, jnp.float32)).reshape(-1)
+    idx = jnp.searchsorted(jnp.asarray(DW_EDGES), dw)
+    return tele._replace(
+        dw_updates=tele.dw_updates + 1,
+        dw_abs_max=jnp.maximum(tele.dw_abs_max, jnp.max(dw)),
+        dw_hist=tele.dw_hist.at[idx].add(1))
+
+
+# ---------------------------------------------------------------------------
+# Host-side summary
+# ---------------------------------------------------------------------------
+
+def summary(tele: Optional[Telemetry]) -> Optional[dict]:
+    """Pull the counters to the host as plain Python numbers (the form
+    the run report embeds). Pure host-side read — emitting (or not
+    emitting) a report never touches the compiled program, which is what
+    the zero-retrace test pins down."""
+    if tele is None:
+        return None
+    d = {}
+    for k, v in tele._asdict().items():
+        a = np.asarray(v)
+        d[k] = a.tolist() if a.ndim else a.item()
+    d["dw_hist_edges"] = DW_EDGES.tolist()
+    return d

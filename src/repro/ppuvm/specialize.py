@@ -97,7 +97,7 @@ def run_program_specialized(words, weights, qc, qa, rates, mod=None,
 
 _CACHE = {}                       # insertion-ordered = LRU via re-insert
 _CACHE_MAX = 64
-_STATS = dict(hits=0, misses=0)
+_STATS = dict(hits=0, misses=0, evictions=0)
 
 
 def specialized_callable(words):
@@ -117,6 +117,7 @@ def specialized_callable(words):
         fn = jax.jit(functools.partial(run_program_specialized, words_np))
         while len(_CACHE) >= _CACHE_MAX:        # evict least-recently used
             _CACHE.pop(next(iter(_CACHE)))
+            _STATS["evictions"] += 1
     else:
         _STATS["hits"] += 1
     _CACHE[key] = fn                            # (re-)insert as most recent
@@ -124,10 +125,13 @@ def specialized_callable(words):
 
 
 def cache_stats():
-    """(hits, misses, size) of the specialized-closure cache."""
-    return dict(_STATS, size=len(_CACHE))
+    """hits/misses/evictions/size/max_size of the specialized-closure
+    cache. ``misses > max_size`` over a bounded workload is the
+    eviction-storm signature: the working set no longer fits and every
+    upload recompiles (see ``repro.obs.timing.eviction_storm``)."""
+    return dict(_STATS, size=len(_CACHE), max_size=_CACHE_MAX)
 
 
 def cache_clear():
     _CACHE.clear()
-    _STATS.update(hits=0, misses=0)
+    _STATS.update(hits=0, misses=0, evictions=0)

@@ -34,15 +34,28 @@ class ServeEngine:
         self._prefill = jax.jit(self.bundle.prefill)
 
     def generate(self, params, prompts: jnp.ndarray, n_new: int,
-                 temperature: float = 0.0, key=None) -> np.ndarray:
-        """prompts: [B, S0] int32. Returns [B, n_new] generated ids."""
+                 temperature: float = 0.0, key=None,
+                 timer=None) -> np.ndarray:
+        """prompts: [B, S0] int32. Returns [B, n_new] generated ids.
+
+        ``timer`` optionally takes a ``repro.obs.timing.PhaseTimer``:
+        the prefill dispatch and the whole decode loop are recorded as
+        ``prefill`` / ``decode`` spans (block_until_ready-bracketed), so
+        serving latency splits show up in the same run reports as the
+        emulation phases. ``None`` changes nothing.
+        """
         b, s0 = prompts.shape
         pl_ = prefix_len(self.arch)
         batch = dict(tokens=prompts)
         if self.arch.vit_dim:
             batch["patch_embeds"] = jnp.zeros(
                 (b, self.arch.n_patches, self.arch.vit_dim), jnp.float32)
-        logits, cache = self._prefill(params, batch)
+        if timer is not None:
+            with timer.span("prefill") as mark:
+                logits, cache = self._prefill(params, batch)
+                mark(logits)
+        else:
+            logits, cache = self._prefill(params, batch)
         total = s0 + pl_
 
         # grow caches to max_len
@@ -57,15 +70,26 @@ class ServeEngine:
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         if temperature > 0:
             key = key if key is not None else jax.random.PRNGKey(0)
-        for i in range(n_new):
-            out.append(np.asarray(tok[:, 0]))
-            logits, cache = self._decode(params, cache, tok,
-                                         jnp.int32(total + i))
-            nxt = logits[:, -1]
-            if temperature > 0:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(
-                    sub, nxt / temperature, axis=-1).astype(jnp.int32)[:, None]
-            else:
-                tok = jnp.argmax(nxt, axis=-1).astype(jnp.int32)[:, None]
+
+        def decode_loop():
+            nonlocal tok, cache, logits, key
+            for i in range(n_new):
+                out.append(np.asarray(tok[:, 0]))
+                logits, cache = self._decode(params, cache, tok,
+                                             jnp.int32(total + i))
+                nxt = logits[:, -1]
+                if temperature > 0:
+                    key, sub = jax.random.split(key)
+                    tok = jax.random.categorical(
+                        sub, nxt / temperature,
+                        axis=-1).astype(jnp.int32)[:, None]
+                else:
+                    tok = jnp.argmax(nxt, axis=-1).astype(jnp.int32)[:, None]
+
+        if timer is not None:
+            with timer.span("decode") as mark:
+                decode_loop()
+                mark(tok)
+        else:
+            decode_loop()
         return np.stack(out, axis=1)

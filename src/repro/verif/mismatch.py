@@ -1,18 +1,29 @@
-"""Virtual instances: fixed-seed Monte-Carlo mismatch realisations.
+"""Virtual instances and divergence localisation.
 
-Paper §3.2.2: "by fixing the MC seed a set of virtual instances can be
-obtained, which can be individually parameterized and analyzed, similar to
-an array of actual in-silicon instances of the design."
+Two verification tools share this module:
 
-``sample_instance(cfg, key, prefix)`` returns the full mismatch realisation
-for ``prefix``-many chips; the same key always yields the same silicon.
+* fixed-seed Monte-Carlo mismatch realisations (paper §3.2.2: "by fixing
+  the MC seed a set of virtual instances can be obtained, which can be
+  individually parameterized and analyzed, similar to an array of actual
+  in-silicon instances of the design") — ``sample_instance(cfg, key,
+  prefix)`` returns the full mismatch realisation for ``prefix``-many
+  chips; the same key always yields the same silicon;
+* the **first-divergence locator** for co-simulation traces
+  (``first_divergence``): when two playback traces split, a bare
+  "mismatch" assert is useless for debugging — the paper's automated
+  monitors (§3.1) instead *localize*: which phase of the machine, which
+  record, which timestep, which array element first went wrong.
+  ``repro.verif.playback.compare_traces`` routes its mismatch messages
+  through this locator.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.bss2 import BSS2Config
 from repro.core import capmem
@@ -61,6 +72,105 @@ def sample_instance(cfg: BSS2Config, key, prefix: Tuple[int, ...] = ()
         cadc_gain=1.0 + mm.sigma_cadc_gain
         * jax.random.normal(k_cg, (*prefix, c)),
     )
+
+
+# ---------------------------------------------------------------------------
+# First-divergence locator for co-simulation traces
+# ---------------------------------------------------------------------------
+
+# which emulation phase produced a given trace-record kind — the coarse
+# "where in the machine" attribution of a divergence
+PHASE_OF_KIND = {
+    "SPIKES": "neuron-scan",
+    "V": "neuron-scan",
+    "RATES": "neuron-scan",
+    "CORR": "corr",
+    "WEIGHTS": "ppu",
+    "PPU_W": "ppu-vm",
+}
+
+
+@dataclass
+class Divergence:
+    """Where two experiment traces first split.
+
+    ``record`` is the index into the trace list; ``kind``/``t`` the
+    record header; ``phase`` the emulation phase that produced the
+    record (``PHASE_OF_KIND``). For array-value divergences ``where`` is
+    the index of the first differing element, ``step`` its absolute
+    timestep when the leading axis is time (SPIKES/V records: the
+    record's end time minus the window length plus the row index), and
+    ``a``/``b`` the two values there. Header/shape/length mismatches set
+    ``structural=True`` and leave the element fields at None.
+    """
+    record: int
+    kind: str
+    t: int
+    phase: str = "?"
+    step: Optional[int] = None
+    where: Optional[Tuple[int, ...]] = None
+    a: Optional[float] = None
+    b: Optional[float] = None
+    n_mismatch: int = 0
+    max_abs: float = 0.0
+    structural: bool = False
+    detail: str = ""
+
+    def describe(self) -> str:
+        if self.structural:
+            return (f"trace diverges structurally at record {self.record} "
+                    f"({self.kind}@{self.t}): {self.detail}")
+        at_step = "" if self.step is None else f" step {self.step},"
+        return (f"first divergence at record {self.record} "
+                f"({self.kind}@{self.t}, phase {self.phase}):{at_step} "
+                f"index {self.where} — {self.a:g} vs {self.b:g} "
+                f"({self.n_mismatch} element(s) differ, "
+                f"max|diff|={self.max_abs:.3e})")
+
+
+def first_divergence(trace_a, trace_b, atol: float = 1e-3,
+                     rtol: float = 1e-4) -> Optional[Divergence]:
+    """Locate the FIRST point two playback traces split (None == match).
+
+    Traces are lists of ``(t, kind, array)`` records as produced by
+    ``repro.verif.playback`` backends. Records are compared in order;
+    the first mismatching one is localized down to the first differing
+    element (first in C order: earliest timestep for time-leading
+    records). Tolerances match ``compare_traces``.
+    """
+    for i, ((ta, ka, va), (tb, kb, vb)) in enumerate(zip(trace_a, trace_b)):
+        if ta != tb or ka != kb:
+            return Divergence(record=i, kind=str(ka), t=int(ta),
+                              structural=True,
+                              detail=f"header ({ta},{ka}) != ({tb},{kb})")
+        va = np.asarray(va, np.float64)
+        vb = np.asarray(vb, np.float64)
+        if va.shape != vb.shape:
+            return Divergence(record=i, kind=str(ka), t=int(ta),
+                              phase=PHASE_OF_KIND.get(ka, "?"),
+                              structural=True,
+                              detail=f"shape {va.shape} != {vb.shape}")
+        bad = ~np.isclose(va, vb, atol=atol, rtol=rtol)
+        if bad.any():
+            idx = tuple(int(j) for j in np.argwhere(bad)[0])
+            step = None
+            if ka in ("SPIKES", "V") and va.ndim >= 1:
+                # record timestamp is the END of the integrated window
+                step = int(ta) - va.shape[0] + idx[0]
+            return Divergence(
+                record=i, kind=str(ka), t=int(ta),
+                phase=PHASE_OF_KIND.get(ka, "?"), step=step, where=idx,
+                a=float(va[idx]), b=float(vb[idx]),
+                n_mismatch=int(bad.sum()),
+                max_abs=float(np.max(np.abs(va - vb))))
+    if len(trace_a) != len(trace_b):
+        n = min(len(trace_a), len(trace_b))
+        longer = trace_a if len(trace_a) > len(trace_b) else trace_b
+        t, k = longer[n][0], longer[n][1]
+        return Divergence(record=n, kind=str(k), t=int(t), structural=True,
+                          detail=f"trace length {len(trace_a)} != "
+                                 f"{len(trace_b)}")
+    return None
 
 
 def ideal_instance(cfg: BSS2Config, prefix: Tuple[int, ...] = ()) -> Dict:

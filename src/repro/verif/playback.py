@@ -120,10 +120,18 @@ class FastBackend:
     the trace-time specializer. All executors are bit-identical (the
     differential fuzz harness), so every choice must produce the same
     trace as the NumPy RefBackend.
+
+    ``telemetry=True`` accumulates the jit-safe counter pytree
+    (``repro.obs.trace``) across the whole playback program — emulation
+    windows, sparse-gate decisions, VM runs and saturation-rail hits —
+    readable via ``telemetry_summary()``. The emitted trace is
+    bit-identical either way.
     """
 
     def __init__(self, cfg: BSS2Config, inst=None,
-                 ppu_executor: str = "auto"):
+                 ppu_executor: str = "auto", telemetry: bool = False):
+        from repro.obs import trace as obs_trace
+
         self.cfg = cfg
         self.inst = inst or ideal_instance(cfg)
         self.core = AnnCore(cfg, self.inst)
@@ -134,6 +142,12 @@ class FastBackend:
         self._ppu_prog = None
         self._ppu_run = None
         self._run_cache = {}
+        self.tele = obs_trace.init_telemetry() if telemetry else None
+
+    def telemetry_summary(self):
+        """Host summary of the accumulated counters (None when off)."""
+        from repro.obs import trace as obs_trace
+        return obs_trace.summary(self.tele)
 
     def _bind_program(self, words: np.ndarray):
         """Jit one PPU_RUN closure per uploaded program: the word stream
@@ -164,7 +178,16 @@ class FastBackend:
         self._ppu_run = run if ex == "numpy" else jax.jit(run)
         self._run_cache[key] = self._ppu_run
 
+    def _run_window(self, run_jit, ev, ad):
+        """One emulation window with the telemetry pytree threaded (the
+        counters ride the jitted call; ``None`` compiles them out)."""
+        self.state, out = run_jit(self.state, ev, ad, telemetry=self.tele)
+        if self.tele is not None:
+            self.tele = out["telemetry"]
+        return out
+
     def execute(self, program: List[Instr]) -> List[Tuple[int, str, np.ndarray]]:
+        from repro.obs import trace as obs_trace
         trace = []
         t = 0
         run_jit = jax.jit(self.core.run)
@@ -177,15 +200,15 @@ class FastBackend:
                     syn=self.state.syn._replace(addresses=jnp.asarray(ins.payload)))
             elif ins.op == "INJECT":
                 ev, ad = ins.payload
-                self.state, out = run_jit(self.state, jnp.asarray(ev),
-                                          jnp.asarray(ad))
+                out = self._run_window(run_jit, jnp.asarray(ev),
+                                       jnp.asarray(ad))
                 t += ev.shape[0]
                 trace.append((t, "SPIKES", np.asarray(out["spikes"])))
             elif ins.op == "RUN":
                 steps = ins.payload
                 ev = jnp.zeros((steps, self.cfg.n_rows))
                 ad = jnp.zeros((steps, self.cfg.n_rows), jnp.int8)
-                self.state, out = run_jit(self.state, ev, ad)
+                out = self._run_window(run_jit, ev, ad)
                 t += steps
                 trace.append((t, "SPIKES", np.asarray(out["spikes"])))
             elif ins.op == "READ_RATES":
@@ -202,10 +225,14 @@ class FastBackend:
                 if self._ppu_prog is None:
                     raise ValueError("PPU_RUN before WRITE_PPU_PROGRAM")
                 mod_fp, noise_fp = ins.payload
-                self.state, _ = self._ppu_run(
+                if self.tele is not None:
+                    self.tele = obs_trace.count_trial(
+                        self.tele, self.state.rate_counters)
+                self.state, regs = self._ppu_run(
                     self.state,
                     None if mod_fp is None else jnp.asarray(mod_fp),
                     None if noise_fp is None else jnp.asarray(noise_fp))
+                self.tele = obs_trace.count_vm(self.tele, regs)
                 trace.append((t, "PPU_W", np.asarray(self.state.syn.weights)))
             else:
                 raise ValueError(ins.op)
@@ -363,19 +390,32 @@ class RefBackend:
 
 
 def execute(program: List[Instr], backend: str, cfg: BSS2Config, inst=None,
-            ppu_executor: str = "auto"):
+            ppu_executor: str = "auto", telemetry: bool = False):
     """Run a playback program. ``backend`` is "fast" (jitted machine
     model) or "ref" (independent NumPy loop); ``ppu_executor`` picks the
     fast backend's PPU-VM executor (ignored by "ref", which always runs
-    the independent NumPy interpreter)."""
-    be = (FastBackend(cfg, inst, ppu_executor=ppu_executor)
+    the independent NumPy interpreter). ``telemetry`` threads the
+    fast backend's counter pytree (ignored by "ref" — the independent
+    reference stays uninstrumented by design)."""
+    be = (FastBackend(cfg, inst, ppu_executor=ppu_executor,
+                      telemetry=telemetry)
           if backend == "fast" else RefBackend(cfg, inst))
     return be.execute(program)
 
 
 def compare_traces(a, b, atol=1e-3) -> List[str]:
     """Diff two experiment traces; returns a list of mismatch descriptions
-    (empty == co-simulation PASS)."""
+    (empty == co-simulation PASS).
+
+    Every value mismatch is LOCALIZED through the first-divergence
+    locator (``repro.verif.mismatch.first_divergence``): the message
+    names the emulation phase, the absolute timestep (for time-leading
+    records), and the first differing array index — "where the traces
+    split", not a bare assert. ``first_divergence(a, b)`` gives the same
+    information as a structured ``Divergence`` object.
+    """
+    from repro.verif.mismatch import PHASE_OF_KIND, first_divergence
+
     errs = []
     if len(a) != len(b):
         errs.append(f"trace length {len(a)} != {len(b)}")
@@ -387,6 +427,11 @@ def compare_traces(a, b, atol=1e-3) -> List[str]:
         if va.shape != vb.shape:
             errs.append(f"[{i}] {ka}@{ta}: shape {va.shape} != {vb.shape}")
         elif not np.allclose(va, vb, atol=atol, rtol=1e-4):
-            d = np.max(np.abs(va - vb))
-            errs.append(f"[{i}] {ka}@{ta}: max|diff|={d:.3e}")
+            d = first_divergence([(ta, ka, va)], [(tb, kb, vb)], atol=atol)
+            at_step = "" if d.step is None else f" step {d.step},"
+            errs.append(
+                f"[{i}] {ka}@{ta}: max|diff|={d.max_abs:.3e} "
+                f"(phase {PHASE_OF_KIND.get(ka, '?')},{at_step} first at "
+                f"index {d.where}: {d.a:g} vs {d.b:g}, "
+                f"{d.n_mismatch} element(s))")
     return errs
