@@ -14,6 +14,8 @@
                        with the jit-safe counter pytree off vs on
                        (paired-median), counter summary, phase split,
                        and a run report under results/
+  wafer                multi-chip weak scaling + routed events/s vs the
+                       ~0.4M events/s bus budget
   roofline             §Roofline table from the dry-run artifacts
 
 Usage:
@@ -37,7 +39,8 @@ from repro.obs.report import jsonable as _jsonable
 def main() -> None:
     from benchmarks import (fig4_calibration, fig8_event_interface,
                             fig11_rstdp, step_time, kernels_bench,
-                            ppuvm_bench, roofline_table, telemetry_bench)
+                            ppuvm_bench, roofline_table, telemetry_bench,
+                            wafer_bench)
     suites = [
         ("fig4_calibration", fig4_calibration.run),
         ("fig8_event_interface", fig8_event_interface.run),
@@ -46,6 +49,7 @@ def main() -> None:
         ("kernels", kernels_bench.run),
         ("ppuvm", ppuvm_bench.run),
         ("telemetry", telemetry_bench.run),
+        ("wafer", wafer_bench.run),
         ("roofline", roofline_table.run),
     ]
     ap = argparse.ArgumentParser()

@@ -1,0 +1,132 @@
+"""Wafer weak-scaling + inter-chip bus throughput.
+
+Weak scaling: K chips of fixed per-chip size on the ring topology (one
+out-link per chip, so per-chip routing work is constant) against the
+K=1 baseline — the wafer premise is that chips emulate concurrently, so
+per-window time should grow far slower than K. (On the single-CPU
+container the emulation itself serializes to ~Kx; the rung exists to
+catch the router adding superlinear cost on top.)
+
+Bus throughput: routed events per wall-clock second through the router
+ALONE (``route()`` on a busy spike grid, full-fan-out all2all routes,
+compact transport) against the paper's ~0.4M events/s software
+event-bus budget (the fig8 anchor) — the same quantity the silicon
+verification budgets for the inter-chip link.
+"""
+import time
+
+import numpy as np
+
+
+REPEATS = 6
+CHIPS = (1, 2, 4, 8)
+R, C, T, W = 32, 16, 128, 4
+ROUTES_PER_LINK = 4
+
+
+def _plan_and_arrays(K, rng, kind="ring"):
+    from repro.wafer import WaferTopology, make_plan
+
+    routes = []
+    for s in range(K):
+        dsts = [(s + 1) % K] if kind == "ring" else list(range(K))
+        for d in dsts:
+            for _ in range(ROUTES_PER_LINK):
+                routes.append((s, int(rng.integers(C)), d,
+                               int(rng.integers(R)), 7))
+    plan = make_plan(WaferTopology(K, kind), R, C, routes)
+    w = rng.integers(20, 60, (K, R, C)).astype(np.int8)
+    a = np.zeros((K, R, C), np.int8)
+    relay = plan.relay_rows()
+    for k in range(K):
+        a[k][relay[k]] = 7
+    return plan, w, a
+
+
+def _bench(fn, *args):
+    """best-of wall time of a blocked call (compile outside)."""
+    import jax
+    best = float("inf")
+    out = None
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run():
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.bss2 import BSS2
+    from repro.core.anncore import AnnCore
+    from repro.obs import trace as obs_trace
+    from repro.verif.mismatch import sample_instance
+    from repro.wafer import InterChipRouter, run_windows
+
+    cfg = dataclasses.replace(BSS2.reduced(), n_rows=R, n_cols=C)
+    rng = np.random.default_rng(0)
+    ev = (rng.random((W, T, 1, R)) < 0.15).astype(np.float32)
+    ad = np.zeros((W, T, 1, R), np.int8)
+
+    scaling = []
+    for K in CHIPS:
+        plan, w, a = _plan_and_arrays(K, rng)
+        inst = sample_instance(cfg, jax.random.PRNGKey(3), (K,))
+        core = AnnCore(cfg, inst, backend="fused")
+        router = InterChipRouter(plan, link_mode="auto")
+        st = core.init_state((K,))
+        st = st._replace(syn=st.syn._replace(weights=jnp.asarray(w),
+                                             addresses=jnp.asarray(a)))
+        evK = jnp.asarray(np.broadcast_to(ev, (W, T, K, R)))
+        adK = jnp.asarray(np.broadcast_to(ad, (W, T, K, R)))
+        tele = obs_trace.init_telemetry()
+
+        fn = jax.jit(lambda s, e, d: run_windows(core, router, s, e, d,
+                                                 telemetry=tele))
+        jax.block_until_ready(fn(st, evK, adK))   # compile
+        best, (_, out) = _bench(fn, st, evK, adK)
+        routed = int(np.asarray(out["telemetry"].routed_events))
+        us_per_win = best / W * 1e6
+        ev_per_s = routed / best if best > 0 else 0.0
+        scaling.append(dict(n_chips=K, us_per_window=round(us_per_win, 1),
+                            routed_events=routed,
+                            routed_events_per_s=round(ev_per_s, 1),
+                            spikes=int(np.asarray(out["spikes"]).sum())))
+        print(f"K={K}: {us_per_win:8.1f} us/window, {routed:6d} routed, "
+              f"{ev_per_s / 1e6:7.3f} M events/s", flush=True)
+
+    base = scaling[0]["us_per_window"]
+    for row in scaling:
+        row["weak_scaling_vs_k1"] = round(row["us_per_window"] / base, 2)
+
+    # router-only bus throughput: full fan-out routes, busy traffic, the
+    # compact (event-record) transport — no emulation in the timed region
+    K = 4
+    routes = [(s, c, d, (c * K + s + d) % R, 7)
+              for s in range(K) for d in range(K) for c in range(C)]
+    from repro.wafer import WaferTopology, make_plan
+    plan = make_plan(WaferTopology(K, "all2all"), R, C, routes)
+    router = InterChipRouter(plan, link_mode="compact",
+                             link_budget=T * R, link_step_budget=R)
+    spikes = jnp.asarray(
+        (rng.random((T, K, C)) < 0.5).astype(np.float32))
+    tele = obs_trace.init_telemetry()
+    route_fn = jax.jit(lambda s: router.route(s, tele))
+    jax.block_until_ready(route_fn(spikes))       # compile
+    best, (_, tl) = _bench(route_fn, spikes)
+    routed = int(np.asarray(tl.routed_events))
+    bus = routed / best if best > 0 else 0.0
+    bus_budget = 0.4e6   # paper: ~0.4M events/s software event-bus path
+    print(f"router-only: {routed} routed events in {best * 1e6:.0f} us -> "
+          f"{bus / 1e6:.3f} M events/s "
+          f"({bus / bus_budget:.1f}x the 0.4M events/s bus budget)")
+    return dict(weak_scaling=scaling,
+                router_routed_events=routed,
+                router_events_per_s=round(bus, 1),
+                paper_bus_budget_events_per_s=bus_budget,
+                budget_ratio=round(bus / bus_budget, 2))

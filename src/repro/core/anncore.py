@@ -210,6 +210,32 @@ class AnnCore:
                                   record_v=record_v, unroll=unroll or 4,
                                   telemetry=telemetry)
 
+    def run_routed(self, state: AnnCoreState, routed_ev, row_spikes_t,
+                   row_addr_t, router, record_v: bool = False,
+                   unroll: Optional[int] = None, telemetry=None):
+        """One window with the inter-chip router closed around it.
+
+        ``routed_ev`` is the [T, K, R] delivery grid the *previous*
+        window's spikes deposited (``repro.wafer.router``): it merges
+        into this window's external inputs before integration, and this
+        window's output spikes are routed into ``outputs["routed"]`` for
+        the next window — the one-window bus-latency budget. With
+        telemetry threading, the router's link census lands in the same
+        ``outputs["telemetry"]`` pytree as the emulation counters.
+        """
+        from repro.obs import trace as obs_trace
+        if telemetry is None and self.telemetry:
+            telemetry = obs_trace.init_telemetry()
+        ev, ad = router.merge(routed_ev, row_spikes_t, row_addr_t)
+        state, out = self.run(state, ev, ad, record_v=record_v,
+                              unroll=unroll, telemetry=telemetry)
+        routed, tele = router.route(out["spikes"],
+                                    out.get("telemetry", telemetry))
+        out["routed"] = routed
+        if tele is not None:
+            out["telemetry"] = tele
+        return state, out
+
     def _run_oracle(self, state: AnnCoreState, row_spikes_t, row_addr_t,
                     record_v: bool = False, unroll: int = 1,
                     telemetry=None):

@@ -27,6 +27,7 @@ from __future__ import annotations
 import math
 from typing import NamedTuple, Tuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -92,6 +93,87 @@ def unpack_events(stream: EventStream, T: int, R: int
 def overflowed(stream: EventStream) -> jnp.ndarray:
     """True when the window produced more events than the capacity."""
     return stream.n_events > stream.capacity
+
+
+def step_counts(stream: EventStream, T: int) -> jnp.ndarray:
+    """[T] record count per timestep of the *stored* records."""
+    seg = jnp.where(stream.valid, stream.t, T)
+    return jnp.zeros((T + 1,), jnp.int32).at[seg].add(1,
+                                                      mode="drop")[:T]
+
+
+def step_overflowed(stream: EventStream, T: int, k_cap: int) -> jnp.ndarray:
+    """True when regrouping at ``k_cap`` would drop records.
+
+    ``overflowed`` only flags *total*-capacity overflow; a stream can fit
+    ``max_events`` while a single step holds more than ``k_cap`` records —
+    ``regroup_events`` then drops that step's tail silently. This is the
+    per-step twin. It also returns True whenever records are already
+    missing (``n_events`` exceeds the stored records — total-capacity
+    overflow or a ``truncate_stream`` cut): the dropped tail could have
+    landed on any step, so the stored per-step counts understate the
+    truth.
+    """
+    missing = stream.n_events > jnp.count_nonzero(
+        stream.valid).astype(jnp.int32)
+    return missing | (jnp.max(step_counts(stream, T)) > k_cap)
+
+
+def census_fits(n_events, k_max, max_events: int, k_cap: int) -> jnp.ndarray:
+    """The shared no-drop predicate: a window whose event census is
+    ``(n_events, k_max)`` packs AND regroups losslessly into capacities
+    ``(max_events, k_cap)``. Gates both the density auto-switch
+    (``synapse.synaptic_current_window(sparse="auto")``) and the wafer
+    router's per-link budget — one definition, so the two fallback paths
+    cannot drift apart."""
+    return (n_events <= max_events) & (k_max <= k_cap)
+
+
+# ---------------------------------------------------------------------------
+# Batched streams — the inter-chip router's per-link transport
+# ---------------------------------------------------------------------------
+
+def pack_events_batch(row_events_bt, event_addr_bt,
+                      max_events: int) -> EventStream:
+    """[B, T, R] grids -> EventStream with [B, E] leaves ([B] counts).
+
+    One fixed-capacity stream per leading-batch element — the wafer
+    router packs one stream per inter-chip link this way."""
+    return jax.vmap(pack_events, in_axes=(0, 0, None))(
+        row_events_bt, event_addr_bt, max_events)
+
+
+def unpack_events_batch(stream: EventStream, T: int, R: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inverse of ``pack_events_batch``: [B, E] stream leaves ->
+    ([B, T, R] efficacies, [B, T, R] addresses)."""
+    return jax.vmap(unpack_events, in_axes=(0, None, None))(stream, T, R)
+
+
+def truncate_stream(stream: EventStream, T: int,
+                    step_budget: int) -> EventStream:
+    """Drop records beyond the first ``step_budget`` of each timestep.
+
+    Models a per-step link bandwidth: the kept records stay t-major and
+    the stream stays drop-detectable — ``n_events`` is left at the TRUE
+    count, so ``step_overflowed`` sees more true records than stored
+    ones and reports the cut. Works on single ([E]) and batched
+    ([B, E]) streams."""
+    e = jnp.arange(stream.capacity, dtype=jnp.int32)
+    seg = jnp.where(stream.valid, stream.t, T)
+
+    def _counts(s):
+        return jnp.zeros((T + 1,), jnp.int32).at[s].add(1, mode="drop")
+
+    counts = _counts(seg) if seg.ndim == 1 else jax.vmap(_counts)(seg)
+    offset = jnp.concatenate(
+        [jnp.zeros((*counts.shape[:-1], 1), jnp.int32),
+         jnp.cumsum(counts[..., :-1], axis=-1)], axis=-1)
+    slot = e - jnp.take_along_axis(
+        offset, jnp.clip(stream.t, 0, T), axis=-1)
+    keep = stream.valid & (slot < step_budget)
+    return stream._replace(eff=jnp.where(keep, stream.eff, 0.0),
+                           valid=keep)
 
 
 def window_stats(row_events_t) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -63,6 +63,9 @@ class ExperimentState(NamedTuple):
     #                               an empty pytree slot, so disabled runs
     #                               compile to the exact pre-telemetry
     #                               program)
+    routed: Any = None            # wafer mode: [T, K, R] inter-chip events
+    #                               the last trial deposited for this one
+    #                               (None = single-chip, an empty slot)
 
 
 def _patterns(ecfg: RSTDPConfig) -> Tuple[np.ndarray, np.ndarray]:
@@ -84,7 +87,10 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                     vm_executor: str = "auto", block_size: int = None,
                     trace_block: int = None, kernel_block: int = None,
                     sparse_mode: str = None, sparse_threshold: float = None,
-                    telemetry: bool = False):
+                    telemetry: bool = False, wafer: int = None,
+                    wafer_topology: str = "all2all", wafer_relay: bool = True,
+                    wafer_ctx=None, link_budget: int = None,
+                    link_mode: str = "auto"):
     """Build the experiment closure set. Returns (init_fn, trial_fn, meta).
 
     The machine uses 2 rows per input (exc/inh pair, Dale's law: the PPU
@@ -129,18 +135,67 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     Off (default) the slot is ``None`` — an empty pytree, the compiled
     program is exactly the pre-telemetry one; on/off is bit-identical in
     spikes/weights (telemetry only reads the existing dataflow).
+
+    ``wafer``: partition the experiment over K virtual chips
+    (``repro.wafer``): the neuron columns split into K contiguous blocks
+    (one per chip — the instance prefix becomes ``(K,)``), all 2I input
+    rows are replicated per chip, and an ``InterChipRouter`` closes the
+    trial loop — each trial's spikes are broadcast over the bus and
+    arrive as relay-row events in the NEXT trial (``wafer_relay``; see
+    ``repro.wafer.topology.s5_column_plan``). Mismatch draws, background
+    events, and exploration noise are drawn at the MONOLITHIC shapes with
+    the monolithic key stream and then rearranged onto the chips, so the
+    learning trajectory is bit-identical for every chip count — the
+    closed-loop half of the split-vs-monolithic contract. ``wafer_ctx``
+    (a ``ShardingCtx``) turns on the shard_map link collectives;
+    ``link_budget``/``link_mode`` are the router's bus-budget knobs.
     """
     if cfg is None:
         cfg = dataclasses.replace(
             BSS2.reduced(), n_rows=2 * ecfg.n_inputs, n_cols=ecfg.n_neurons)
     assert cfg.n_rows == 2 * ecfg.n_inputs and cfg.n_cols == ecfg.n_neurons
+    K = wafer
+    if K:
+        from repro.wafer import InterChipRouter, s5_column_plan
+        assert prefix == (), "wafer mode owns the instance prefix"
+        assert ecfg.n_neurons % K == 0 and (ecfg.n_neurons // K) % 2 == 0, \
+            "need an even per-chip column count (reward parity)"
+        c_loc = ecfg.n_neurons // K
+        chip_cfg = dataclasses.replace(cfg, n_cols=c_loc)
+        prefix = (K,)
+        plan = s5_column_plan(K, ecfg.n_inputs, ecfg.n_neurons,
+                              relay=wafer_relay, kind=wafer_topology)
+        router = InterChipRouter(plan, ctx=wafer_ctx,
+                                 link_budget=link_budget,
+                                 link_mode=link_mode)
+    else:
+        c_loc = ecfg.n_neurons
+        chip_cfg = cfg
+        router = None
     mask_a, mask_b = _patterns(ecfg)
     mask_a, mask_b = jnp.asarray(mask_a), jnp.asarray(mask_b)
     even = (jnp.arange(ecfg.n_neurons) % 2 == 0).astype(jnp.float32)
+    if K:
+        even = even.reshape(K, c_loc)
 
     if instance_key is None:
         instance_key = jax.random.PRNGKey(7)
-    inst = sample_instance(cfg, instance_key, prefix)
+    if K:
+        # the fleet is ONE partitioned instance: sample the monolithic
+        # mismatch realisation, then slice columns per chip / replicate
+        # the (shared) row-side parameters
+        inst_g = sample_instance(cfg, instance_key, ())
+        _cols = lambda x: jnp.reshape(x, (K, c_loc))
+        _rows = lambda x: jnp.broadcast_to(x, (K, x.shape[-1]))
+        inst = dict(
+            neuron_params=jax.tree.map(_cols, inst_g["neuron_params"]),
+            weight_gain=_cols(inst_g["weight_gain"]),
+            stp_offset=_rows(inst_g["stp_offset"]),
+            stp_calib=_rows(inst_g["stp_calib"]),
+            cadc_offset=_cols(inst_g["cadc_offset"]),
+            cadc_gain=_cols(inst_g["cadc_gain"]))
+    else:
+        inst = sample_instance(cfg, instance_key, prefix)
     # const_addr: every driver row carries exactly one source here (input i
     # -> rows 2i/2i+1, address 0 throughout), so the fused path may resolve
     # the address-match mask once per trial
@@ -148,28 +203,34 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
         block_size=block_size, trace_block=trace_block,
         kernel_block=kernel_block, sparse_mode=sparse_mode,
         sparse_threshold=sparse_threshold).items() if v is not None}
-    core = AnnCore(cfg, inst, backend=backend, kernel_impl=kernel_impl,
+    core = AnnCore(chip_cfg, inst, backend=backend, kernel_impl=kernel_impl,
                    const_addr=True, **block_kw)
-    ppu = VectorUnit(cfg, inst)
+    ppu = VectorUnit(chip_cfg, inst)
 
     def init(key) -> ExperimentState:
         st = core.init_state(prefix)
-        w0 = ecfg.w_init * jnp.ones((*prefix, ecfg.n_inputs, ecfg.n_neurons))
+        w0 = ecfg.w_init * jnp.ones((*prefix, ecfg.n_inputs, c_loc))
         st = st._replace(syn=_write_signed(st.syn, w0))
         return ExperimentState(
             core=st, w_signed=w0,
-            mean_reward=jnp.zeros((*prefix, ecfg.n_neurons)), key=key,
-            tele=obs_trace.init_telemetry() if telemetry else None)
+            mean_reward=jnp.zeros((*prefix, c_loc)), key=key,
+            tele=obs_trace.init_telemetry() if telemetry else None,
+            routed=router.init_buffer(ecfg.trial_steps) if K else None)
 
     def _write_signed(syn, w_signed):
         w_exc = jnp.clip(w_signed, 0, None)
         w_inh = jnp.clip(-w_signed, 0, None)
         w_rows = jnp.stack([w_exc, w_inh], axis=-3)   # [.., 2, I, C]
-        shape = (*w_signed.shape[:-2], 2 * ecfg.n_inputs, ecfg.n_neurons)
+        shape = (*w_signed.shape[:-2], 2 * ecfg.n_inputs, c_loc)
         w_rows = w_rows.transpose(
             *range(w_signed.ndim - 2), -2, -3, -1).reshape(shape)
         return syn._replace(weights=synapse.quantize_weight(w_rows))
     _write_signed.__doc__ = "interleave exc/inh rows: row 2i exc, 2i+1 inh"
+
+    # wafer mode: events and exploration noise are DRAWN monolithically
+    # (jax.random is shape-dependent, so per-chip draws would break the
+    # bit-for-bit chip-count invariance) and then placed onto the chips
+    gen_prefix = () if K else prefix
 
     # burst schedule is static per experiment — precomputed once here, not
     # rebuilt inside every (possibly scanned) trial
@@ -180,23 +241,37 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     is_burst = jnp.asarray(
         np.any((_dt_to_burst >= 0) & (_dt_to_burst < ecfg.burst_width),
                axis=1).astype(np.float32)
-        .reshape(T, *([1] * len(prefix)), 1))
+        .reshape(T, *([1] * len(gen_prefix)), 1))
 
     def _gen_events(key, stim):
         """Event stream [T, .., 2I] for stimulus in {0:none, 1:A, 2:B}."""
         kb, kp = jax.random.split(key)
-        bg = (jax.random.uniform(kb, (T, *prefix, ecfg.n_inputs))
+        bg = (jax.random.uniform(kb, (T, *gen_prefix, ecfg.n_inputs))
               < ecfg.bg_prob).astype(jnp.float32)
         # pattern: synchronized bursts on the pattern channels
         pat_mask = jnp.where(stim == 1, mask_a,
                              jnp.where(stim == 2, mask_b,
                                        jnp.zeros_like(mask_a)))
-        pat = is_burst * pat_mask.reshape(*([1] * (1 + len(prefix))), -1)
+        pat = is_burst * pat_mask.reshape(*([1] * (1 + len(gen_prefix))), -1)
         ch = jnp.clip(bg + pat, 0, 1)
         # input i drives rows 2i (exc) and 2i+1 (inh) with the same events
         ev = jnp.repeat(ch, 2, axis=-1)
+        if K:
+            # every chip sees the full (replicated) stimulus
+            ev = jnp.broadcast_to(ev[:, None, :], (T, K, ev.shape[-1]))
         addr = jnp.zeros(ev.shape, jnp.int8)
         return ev, addr
+
+    def _draw_xi(sub):
+        """Exploration noise, monolithic layout in wafer mode: the global
+        [I, n_neurons] draw reshaped so chip k's column block c equals
+        global column k * c_loc + c."""
+        if K:
+            g = jax.random.normal(sub, (ecfg.n_inputs, ecfg.n_neurons))
+            return ecfg.noise * jnp.transpose(
+                g.reshape(ecfg.n_inputs, K, c_loc), (1, 0, 2))
+        return ecfg.noise * jax.random.normal(
+            sub, (*prefix, ecfg.n_inputs, c_loc))
 
     def _reward(rates, stim):
         fired = (rates >= ecfg.fire_thresh).astype(jnp.float32)
@@ -225,7 +300,7 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
         tele = obs_trace.count_vm(tele, regs)
         dw = regs[0][..., 0::2, :].astype(jnp.float32) / _visa.ONE
         key, sub = jax.random.split(k_rule)
-        xi = ecfg.noise * jax.random.normal(sub, state.w_signed.shape)
+        xi = _draw_xi(sub)
         w_signed = jnp.clip(state.w_signed + dw + xi, -45.0, 45.0)
         mean_r = state.mean_reward + ecfg.gamma * (
             reward - state.mean_reward)                         # Eq. 2
@@ -236,7 +311,15 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     def _trial_with(state, stim, ev, addr, k_rule, key_next):
         """Trial body given pregenerated events + keys (shared between the
         per-trial dispatch path and the whole-experiment scan)."""
-        cs, core_out = core.run(state.core, ev, addr, telemetry=state.tele)
+        if router is not None:
+            # close the wafer loop: last trial's routed spikes merge into
+            # this trial's inputs, this trial's spikes go on the bus
+            cs, core_out = core.run_routed(state.core, state.routed, ev,
+                                           addr, router,
+                                           telemetry=state.tele)
+        else:
+            cs, core_out = core.run(state.core, ev, addr,
+                                    telemetry=state.tele)
         tele = core_out.get("telemetry")
         rates = cs.rate_counters
         r = _reward(rates, stim)
@@ -256,7 +339,8 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                                   rule_state["w_signed"])
         new = ExperimentState(core=cs2, w_signed=rule_state["w_signed"],
                               mean_reward=rule_state["mean_reward"],
-                              key=key_next, tele=tele)
+                              key=key_next, tele=tele,
+                              routed=core_out.get("routed"))
         elig = (obs["causal"][..., 0::2, :]
                 - obs["acausal"][..., 0::2, :]).astype(jnp.float32) / 255.0
         metrics = dict(reward=r, mean_reward=rule_state["mean_reward"],
@@ -303,7 +387,7 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
         elig = (causal - acausal).astype(jnp.float32) / 255.0
         mod = (reward - rule_state["mean_reward"])[..., None, :]
         key, sub = jax.random.split(rule_state["key"])
-        xi = ecfg.noise * jax.random.normal(sub, rule_state["w_signed"].shape)
+        xi = _draw_xi(sub)
         dw = ecfg.eta * mod * elig
         # homeostatic punishment (PPU rate counters): firing when the trial
         # earned no reward uniformly depresses the neuron's whole column.
@@ -329,7 +413,7 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
 
     meta = dict(cfg=cfg, ecfg=ecfg, inst=inst, core=core, ppu=ppu,
                 mask_a=mask_a, mask_b=mask_b, even=even,
-                scanned_training=scanned_training)
+                scanned_training=scanned_training, router=router)
     return init, trial, meta
 
 
@@ -348,7 +432,10 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                  rule_impl: str = "python", vm_executor: str = "auto",
                  block_size: int = None, trace_block: int = None,
                  kernel_block: int = None, sparse_mode: str = None,
-                 sparse_threshold: float = None, telemetry: bool = False):
+                 sparse_threshold: float = None, telemetry: bool = False,
+                 wafer: int = None, wafer_topology: str = "all2all",
+                 wafer_relay: bool = True, wafer_ctx=None,
+                 link_budget: int = None, link_mode: str = "auto"):
     """Full §5 experiment. Returns the metrics history (stacked).
 
     Modes:
@@ -371,7 +458,12 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                                         kernel_block=kernel_block,
                                         sparse_mode=sparse_mode,
                                         sparse_threshold=sparse_threshold,
-                                        telemetry=telemetry)
+                                        telemetry=telemetry, wafer=wafer,
+                                        wafer_topology=wafer_topology,
+                                        wafer_relay=wafer_relay,
+                                        wafer_ctx=wafer_ctx,
+                                        link_budget=link_budget,
+                                        link_mode=link_mode)
     state = init(jax.random.PRNGKey(seed + 1))
     stims = jnp.asarray(np.resize([1, 2, 0], n_trials), jnp.int32)
     if scan is None:

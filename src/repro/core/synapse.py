@@ -232,7 +232,7 @@ def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
         return i, obs_trace.count_route(telemetry, sparse=True)
 
     n, kmax = events.window_stats(row_events_t)
-    fits = (n <= max_events) & (kmax <= k_cap)
+    fits = events.census_fits(n, kmax, max_events, k_cap)
     i = jax.lax.cond(
         fits,
         lambda: _sparse_window(weights, addresses, row_events_t,

@@ -36,6 +36,15 @@ Counter catalogue (see README "Observability" for the full matrix):
   census_events_max / census_k_max
                            worst window event count / per-step count the
                            gate measured (capacity headroom indicator)
+  routed_events / link_overflows / link_events_max
+                           inter-chip events the wafer router placed on
+                           the event bus (per-link-deduped records), the
+                           number of link exchanges whose census exceeded
+                           the per-link budget (compact mode: dropped
+                           tails; auto mode: counted dense fallbacks —
+                           either way never silent), and the worst
+                           per-link event count seen (bus headroom
+                           against the ~0.4M events/s budget)
   vm_runs / vm_sat_hits    PPU-VM program executions, and final register
                            lanes resting on the Q8.8 saturation rails
                            (0x7FFF / 0x8000 — fracsat clipping happened)
@@ -61,6 +70,7 @@ DW_BINS = len(DW_EDGES) + 1
 _I32_FIELDS = ("steps", "trials", "in_events", "out_spikes",
                "dense_windows", "sparse_windows", "gated_windows",
                "overflow_fallbacks", "census_events_max", "census_k_max",
+               "routed_events", "link_overflows", "link_events_max",
                "vm_runs", "vm_sat_hits", "dw_updates")
 
 
@@ -76,6 +86,9 @@ class Telemetry(NamedTuple):
     overflow_fallbacks: jnp.ndarray  # [] i32 census overflow -> dense
     census_events_max: jnp.ndarray   # [] i32 worst gated window events
     census_k_max: jnp.ndarray        # [] i32 worst gated per-step events
+    routed_events: jnp.ndarray       # [] i32 inter-chip events routed
+    link_overflows: jnp.ndarray      # [] i32 link censuses over budget
+    link_events_max: jnp.ndarray     # [] i32 worst per-link event count
     vm_runs: jnp.ndarray             # [] i32 PPU-VM program executions
     vm_sat_hits: jnp.ndarray         # [] i32 register lanes on the rails
     dw_updates: jnp.ndarray          # [] i32 weight-update applications
@@ -144,6 +157,26 @@ def count_gate(tele: Optional[Telemetry], fits, n_events, k_max
                                       n_events.astype(jnp.int32)),
         census_k_max=jnp.maximum(tele.census_k_max,
                                  k_max.astype(jnp.int32)))
+
+
+def count_links(tele: Optional[Telemetry], n_link, fits_link
+                ) -> Optional[Telemetry]:
+    """One inter-chip routing exchange: ``n_link`` is the per-link event
+    census ([L] i32, records after per-link dedup — the counts the bus
+    would carry), ``fits_link`` the per-link budget verdict ([L] bool from
+    ``events.census_fits``). A link over budget is an overflow: the
+    compact transport DROPPED its tail, the auto transport fell back to
+    the dense exchange — both land in ``link_overflows``, so the PR 6
+    silent-drop regime cannot recur on the wafer bus."""
+    if tele is None:
+        return None
+    n_link = n_link.astype(jnp.int32)
+    return tele._replace(
+        routed_events=tele.routed_events + jnp.sum(n_link),
+        link_overflows=tele.link_overflows
+        + jnp.count_nonzero(~fits_link).astype(jnp.int32),
+        link_events_max=jnp.maximum(tele.link_events_max,
+                                    jnp.max(n_link)))
 
 
 def count_trial(tele: Optional[Telemetry], rate_counters

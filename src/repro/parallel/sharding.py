@@ -180,15 +180,46 @@ class ShardingCtx:
         blocked/fused kernels iterate as their outermost grid dimension is
         the one the mesh distributes over ``data`` — the fleet maps onto
         pods without reshuffling between the kernel and collective views.
+
+        Routes through ``_pspec`` so the divisibility demotion applies
+        like every other spec builder: a fleet whose instance count does
+        not divide the data-axis size (or whose column dim is not
+        divisible by ``model``) degrades to replicated on that dim
+        instead of producing an invalid ``NamedSharding``.
         """
         if self.mesh is None:
             return None
-        parts = [None] * len(shape)
-        parts[0] = self.act_rules[Ax.INSTANCE]
+        axes = [None] * len(shape)
+        axes[0] = Ax.INSTANCE
         if cols is not None and len(shape) >= 2 and shape[-1] == cols:
-            parts[-1] = self.act_rules[Ax.NRN]
-        return NamedSharding(self.mesh, PSpec(*[
-            tuple(p) if isinstance(p, list) else p for p in parts]))
+            axes[-1] = Ax.NRN
+        return NamedSharding(self.mesh,
+                             self._pspec(axes, self.act_rules, shape))
+
+    # -- wafer link collectives ----------------------------------------------
+    def instance_axis_name(self) -> Optional[str]:
+        """The single mesh axis name inter-chip link collectives run over
+        (``ppermute``/``all_gather`` take it as ``axis_name``). ``None``
+        when there is no mesh or the instance rule spans several mesh
+        axes — the wafer router then degrades to its local transport,
+        the same graceful-degradation contract as ``_pspec``."""
+        if self.mesh is None:
+            return None
+        r = self.act_rules[Ax.INSTANCE]
+        if isinstance(r, (tuple, list)):
+            if len(r) != 1:
+                return None
+            r = r[0]
+        return r
+
+    def link_specs(self, chip_dim: int, ndim: int) -> Tuple[PSpec, PSpec]:
+        """(sharded, replicated) PartitionSpecs for the wafer router's
+        ``shard_map``: chip-major arrays carry the instance rule on
+        ``chip_dim``; link censuses come back replicated."""
+        parts = [None] * ndim
+        r = self.act_rules[Ax.INSTANCE]
+        parts[chip_dim] = tuple(r) if isinstance(r, list) else r
+        return PSpec(*parts), PSpec()
 
 
 # ---------------------------------------------------------------------------

@@ -26,12 +26,19 @@ class ServeEngine:
         self.ctx = ctx or ShardingCtx()
         self.max_len = max_len
         self.bundle = build_model(arch, self.ctx)
-        kwargs = {}
+        decode_kw, prefill_kw = {}, {}
         if self.ctx.mesh is not None:
-            kwargs["in_shardings"] = (
-                tree_pspecs(self.bundle.decls, self.ctx), None, None, None)
-        self._decode = jax.jit(self.bundle.decode_step, donate_argnums=(1,))
-        self._prefill = jax.jit(self.bundle.prefill)
+            # pin the params to their decl shardings; cache/token/position
+            # stay unconstrained (the cache keeps whatever layout prefill
+            # produced — donation must not force a reshard)
+            psh = tree_pspecs(self.bundle.decls, self.ctx)
+            unc = jax.sharding.UNSPECIFIED if hasattr(
+                jax.sharding, "UNSPECIFIED") else None
+            decode_kw["in_shardings"] = (psh, unc, unc, unc)
+            prefill_kw["in_shardings"] = (psh, unc)
+        self._decode = jax.jit(self.bundle.decode_step, donate_argnums=(1,),
+                               **decode_kw)
+        self._prefill = jax.jit(self.bundle.prefill, **prefill_kw)
 
     def generate(self, params, prompts: jnp.ndarray, n_new: int,
                  temperature: float = 0.0, key=None,

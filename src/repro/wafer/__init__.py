@@ -1,0 +1,11 @@
+"""Wafer-scale multi-chip emulation: topologies, route plans, and the
+inter-chip event router (see ``repro.wafer.topology`` /
+``repro.wafer.router``)."""
+from repro.wafer.router import InterChipRouter, run_windows
+from repro.wafer.topology import (WaferPlan, WaferTopology, make_plan,
+                                  monolithic_plan, monolithic_weights,
+                                  s5_column_plan)
+
+__all__ = ["InterChipRouter", "run_windows", "WaferPlan", "WaferTopology",
+           "make_plan", "monolithic_plan", "monolithic_weights",
+           "s5_column_plan"]

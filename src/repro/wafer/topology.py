@@ -1,0 +1,196 @@
+"""Wafer topologies and multi-chip network plans.
+
+The BrainScaleS line scales the single 512-neuron / 130K-synapse chip to
+wafers of interconnected chips; spikes cross chip boundaries as address-
+tagged records on the inter-chip event bus. This module is the *static*
+side of that picture: which chips exist, which links connect them, and
+which (source column -> destination row) routes ride on each link. The
+dynamic side — moving the actual event records each window — lives in
+``repro.wafer.router``.
+
+Everything here is host-side numpy: plans are built and validated once,
+then the router turns them into constant index tables of the jitted
+program.
+
+The correctness anchor is ``monolithic_plan``: any K-chip plan maps to an
+equivalent 1-chip plan whose synapse matrix is the block-diagonal
+embedding of the per-chip matrices and whose routes are the same routes
+in global coordinates. Off-block weights are exactly zero, and a zero
+6-bit weight contributes an exact-zero term to the per-column FMA chain
+(0.0 + x == x for the nonnegative operands involved), so the split and
+monolithic emulations are bit-identical — the split-vs-monolithic
+contract ``tests/test_wafer.py`` asserts with ``assert_array_equal``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class WaferTopology:
+    """K chips and the directed inter-chip links between them.
+
+    ``kind``:
+      "ring"     chip k -> chip (k+1) % K (the neighbor topology the
+                 router exchanges with ``ppermute``); K == 1 degenerates
+                 to the single self-link.
+      "all2all"  every ordered pair INCLUDING self-links (the wafer bus
+                 loops back on-chip), exchanged with a masked
+                 ``all_gather`` — arbitrary fan-in.
+    """
+    n_chips: int
+    kind: str = "ring"
+
+    def __post_init__(self):
+        assert self.n_chips >= 1
+        if self.kind not in ("ring", "all2all"):
+            raise ValueError(f"unknown topology kind {self.kind!r}")
+
+    def links(self) -> Tuple[Tuple[int, int], ...]:
+        """Directed (src_chip, dst_chip) links, src-major order — the
+        link index order every router table uses."""
+        k = self.n_chips
+        if self.kind == "ring":
+            return tuple((s, (s + 1) % k) for s in range(k))
+        return tuple((s, d) for s in range(k) for d in range(k))
+
+    @property
+    def n_links(self) -> int:
+        return len(self.links())
+
+    @property
+    def links_per_chip(self) -> int:
+        """Out-links per source chip — uniform for both kinds, which is
+        what lets the sharded transport slice its local link block by
+        device rank."""
+        return self.n_links // self.n_chips
+
+
+@dataclass(frozen=True)
+class WaferPlan:
+    """A topology plus the route list riding on it.
+
+    Each route forwards spikes of ``(src_chip, src_col)`` to input row
+    ``(dst_chip, dst_row)`` where they arrive as events carrying
+    ``addr`` — the ``(t, row, addr, efficacy)`` record of the event bus.
+    Routes are arrays (not per-pair tables) so arbitrary fan-out/fan-in
+    is just more rows in the list.
+    """
+    topology: WaferTopology
+    n_rows: int                       # synapse rows per chip
+    n_cols: int                       # neuron columns per chip
+    src_chip: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    src_col: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    dst_chip: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    dst_row: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    addr: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+
+    def __post_init__(self):
+        k, r, c = self.topology.n_chips, self.n_rows, self.n_cols
+        arrs = (self.src_chip, self.src_col, self.dst_chip, self.dst_row,
+                self.addr)
+        n = len(self.src_chip)
+        assert all(len(a) == n for a in arrs), "ragged route arrays"
+        if n == 0:
+            return
+        assert (0 <= self.src_chip).all() and (self.src_chip < k).all()
+        assert (0 <= self.dst_chip).all() and (self.dst_chip < k).all()
+        assert (0 <= self.src_col).all() and (self.src_col < c).all()
+        assert (0 <= self.dst_row).all() and (self.dst_row < r).all()
+        assert (0 <= self.addr).all() and (self.addr < 64).all(), \
+            "event addresses are 6-bit"
+        links = set(self.topology.links())
+        used = set(zip(self.src_chip.tolist(), self.dst_chip.tolist()))
+        assert used <= links, f"routes use non-links: {sorted(used - links)}"
+        # a destination row is one physical driver: every route landing on
+        # it must deliver the same event address
+        key = self.dst_chip.astype(np.int64) * r + self.dst_row
+        for g in np.unique(key):
+            a = self.addr[key == g]
+            assert (a == a[0]).all(), \
+                f"conflicting addresses on dst row {divmod(int(g), r)}"
+
+    @property
+    def n_routes(self) -> int:
+        return len(self.src_chip)
+
+    def relay_rows(self) -> np.ndarray:
+        """[K, R] bool — rows some route delivers into."""
+        m = np.zeros((self.topology.n_chips, self.n_rows), bool)
+        m[self.dst_chip, self.dst_row] = True
+        return m
+
+    def dst_addr_grid(self) -> np.ndarray:
+        """[K, R] int8 — the (validated-unique) event address each relay
+        row receives; 0 on non-relay rows."""
+        g = np.zeros((self.topology.n_chips, self.n_rows), np.int8)
+        g[self.dst_chip, self.dst_row] = self.addr.astype(np.int8)
+        return g
+
+
+def make_plan(topology: WaferTopology, n_rows: int, n_cols: int,
+              routes: Sequence[Tuple[int, int, int, int, int]]) -> WaferPlan:
+    """Plan from a route list of (src_chip, src_col, dst_chip, dst_row,
+    addr) tuples."""
+    a = np.asarray(list(routes), np.int32).reshape(-1, 5)
+    return WaferPlan(topology=topology, n_rows=n_rows, n_cols=n_cols,
+                     src_chip=a[:, 0], src_col=a[:, 1], dst_chip=a[:, 2],
+                     dst_row=a[:, 3], addr=a[:, 4])
+
+
+def monolithic_plan(plan: WaferPlan) -> WaferPlan:
+    """The K-chip plan as ONE big virtual chip: global row/col coordinates
+    (chip-block-contiguous: global row = chip * R + row, global col =
+    chip * C + col) and every route on the single self-link. Pair with
+    ``monolithic_weights`` to build the block-diagonal synapse matrix."""
+    k, r, c = plan.topology.n_chips, plan.n_rows, plan.n_cols
+    return WaferPlan(
+        topology=WaferTopology(1, plan.topology.kind),
+        n_rows=k * r, n_cols=k * c,
+        src_chip=np.zeros(plan.n_routes, np.int32),
+        src_col=plan.src_chip * c + plan.src_col,
+        dst_chip=np.zeros(plan.n_routes, np.int32),
+        dst_row=plan.dst_chip * r + plan.dst_row,
+        addr=plan.addr.copy())
+
+
+def monolithic_weights(per_chip: np.ndarray) -> np.ndarray:
+    """[K, R, C] per-chip synapse planes -> [K*R, K*C] block-diagonal
+    monolithic plane (off-block entries zero — exact-zero FMA terms, see
+    module docstring). Works for weights and addresses alike."""
+    k, r, c = per_chip.shape
+    out = np.zeros((k * r, k * c), per_chip.dtype)
+    for i in range(k):
+        out[i * r:(i + 1) * r, i * c:(i + 1) * c] = per_chip[i]
+    return out
+
+
+def s5_column_plan(n_chips: int, n_inputs: int, n_neurons: int,
+                   relay: bool = True, kind: str = "all2all") -> WaferPlan:
+    """Wafer partition of the §5 pattern-discrimination network: the
+    neuron columns split over ``n_chips`` contiguous blocks (all 2I input
+    rows replicated per chip — every chip sees the full stimulus).
+
+    With ``relay=True`` every global neuron column is also announced to
+    every chip over the bus: spikes of global column j arrive one window
+    later on row j % 2I carrying address 63. Address 63 matches no §5
+    synapse (the experiment wires address 0 throughout), so the relayed
+    events add zero synaptic current but exercise the full router path —
+    STP and correlation-sensor state on the relay rows evolve with the
+    routed traffic, identically on every chip count. Requires
+    ``kind="all2all"`` (self-links included) so all chips, including the
+    spike's own, receive the same broadcast.
+    """
+    r = 2 * n_inputs
+    assert n_neurons % n_chips == 0
+    c_loc = n_neurons // n_chips
+    routes = []
+    if relay:
+        assert kind == "all2all", "the §5 relay broadcast needs all2all"
+        for j in range(n_neurons):
+            for d in range(n_chips):
+                routes.append((j // c_loc, j % c_loc, d, j % r, 63))
+    return make_plan(WaferTopology(n_chips, kind), r, c_loc, routes)

@@ -201,3 +201,48 @@ def test_vector_unit_uses_same_semantics():
     # changes weights — just check both respect the 6-bit range
     assert got.min() >= 0 and got.max() <= 63
     assert np.asarray(ref_w).min() >= 0
+
+
+def test_instance_sharding_demotes_odd_fleets_subprocess():
+    """``instance_sharding`` must route through ``_pspec``'s divisibility
+    demotion: a fleet that does not divide the data axis (or a column dim
+    not divisible by ``model``) degrades to replicated on that dim instead
+    of handing jit an invalid NamedSharding. 8 fake devices, mesh (4, 2)."""
+    import os
+    import subprocess
+    import sys
+
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_smoke_mesh
+from repro.parallel.sharding import ShardingCtx
+
+ctx = ShardingCtx(mesh=make_smoke_mesh((4, 2)))
+
+def spec(shape, cols=None):
+    return ctx.instance_sharding(shape, cols=cols).spec
+
+# divisible fleet + divisible cols: fully mapped
+assert spec((8, 16, 4), cols=4) == jax.sharding.PartitionSpec(
+    ("data",), None, "model"), spec((8, 16, 4), cols=4)
+# odd fleet (6 % 4 != 0): instance dim demoted, cols still mapped
+assert spec((6, 16, 4), cols=4)[0] is None
+assert spec((6, 16, 4), cols=4)[2] == "model"
+# odd cols (5 % 2 != 0): column dim demoted, fleet still mapped
+assert spec((8, 16, 5), cols=5)[0] == ("data",)
+assert spec((8, 16, 5), cols=5)[2] is None
+# the demoted sharding must actually be placeable
+x = jax.device_put(jnp.zeros((6, 16, 4)),
+                   ctx.instance_sharding((6, 16, 4), cols=4))
+assert x.sharding.is_equivalent_to(
+    ctx.instance_sharding((6, 16, 4), cols=4), 3)
+print("DEMOTE_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "DEMOTE_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]

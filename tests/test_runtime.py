@@ -227,3 +227,47 @@ print("ELASTIC_OK")
                        text=True, cwd=os.path.dirname(os.path.dirname(
                            os.path.abspath(__file__))))
     assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_serve_engine_applies_decl_shardings_subprocess():
+    """The engine must actually hand its ``in_shardings`` to ``jax.jit``:
+    the compiled prefill/decode params shardings equal the decl pspecs
+    (the regression was building the kwargs and dropping them — params
+    silently resharded to whatever jit inferred). 8 fake devices."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from repro.config import get_arch
+from repro.launch.mesh import make_smoke_mesh
+from repro.parallel.sharding import ShardingCtx, init_params, tree_pspecs
+from repro.serve.engine import ServeEngine
+
+arch = get_arch("smollm-360m").reduced()
+ctx = ShardingCtx(mesh=make_smoke_mesh((2, 2)))
+eng = ServeEngine(arch, ctx, max_len=32)
+params = init_params(eng.bundle.decls, jax.random.PRNGKey(0), ctx)
+batch = dict(tokens=jnp.ones((2, 8), jnp.int32))
+
+compiled = eng._prefill.lower(params, batch).compile()
+got = compiled.input_shardings[0][0]          # params subtree
+want = tree_pspecs(eng.bundle.decls, ctx)
+flat_g, _ = jax.tree.flatten(got)
+flat_w, _ = jax.tree.flatten(want)
+flat_p, _ = jax.tree.flatten(params)
+assert len(flat_g) == len(flat_w) > 0
+for g, w, p in zip(flat_g, flat_w, flat_p):
+    assert g.is_equivalent_to(w, p.ndim), (g, w, p.shape)
+
+# the served path still runs end to end under the mesh
+out = eng.generate(params, jnp.ones((2, 8), jnp.int32), n_new=3)
+assert out.shape == (2, 3)
+print("SERVE_SHARDINGS_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "SERVE_SHARDINGS_OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-3000:]

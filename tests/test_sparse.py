@@ -327,6 +327,58 @@ class TestOverflowContract:
             max_events=self.T * self.R, k_cap=2)
         assert np.abs(np.asarray(forced) - np.asarray(dense)).max() > 0
 
+    def test_step_overflow_predicate_flags_silent_regime(self):
+        """The latent-bug regime: a stream that FITS its total capacity
+        (``overflowed() == False``) but holds a step with more than
+        ``k_cap`` records — ``regroup_events`` drops that step's tail
+        while the total-capacity predicate reports all-clear. The
+        per-step predicate ``step_overflowed`` must flag it, and the
+        shared ``census_fits`` gate (what sparse="auto" and the wafer
+        router's link budget both use) must refuse it."""
+        w, a, ev, ad = self._operands()
+        dense = synapse.synaptic_current_window(w, a, ev, ad, 1.0,
+                                                sparse="never")
+        k_cap = 2
+        stream = events.pack_events(ev, ad, self.T * self.R)
+        assert not bool(events.overflowed(stream)), \
+            "regime needs a stream that fits its total capacity"
+        assert bool(events.step_overflowed(stream, self.T, k_cap)), \
+            "per-step predicate must flag the regroup drop"
+        n, kmax = events.window_stats(ev)
+        assert not bool(events.census_fits(n, kmax, self.T * self.R,
+                                           k_cap)), \
+            "the shared gate must refuse what regroup would drop"
+        # and the drop is real: the forced path diverges from dense
+        forced = synapse.synaptic_current_window(
+            w, a, ev, ad, 1.0, sparse="always",
+            max_events=self.T * self.R, k_cap=k_cap)
+        assert np.abs(np.asarray(forced) - np.asarray(dense)).max() > 0
+
+    def test_step_counts_and_truncate_stream(self):
+        """``step_counts`` reports the stored per-step records;
+        ``truncate_stream`` cuts each step at the budget while keeping
+        ``n_events`` at the TRUE count (drop-detectable)."""
+        ev, ad = _window(16, 32, key=53, p=0.4)
+        T = 16
+        stream = events.pack_events(ev, ad, T * 32)
+        counts = np.asarray(events.step_counts(stream, T))
+        np.testing.assert_array_equal(
+            counts, np.count_nonzero(np.asarray(ev), axis=1))
+        cut = events.truncate_stream(stream, T, 3)
+        cut_counts = np.asarray(events.step_counts(cut, T))
+        np.testing.assert_array_equal(cut_counts,
+                                      np.minimum(counts, 3))
+        # kept records are exactly each step's first 3 (t-major order)
+        ev2, _ = events.unpack_events(cut, T, 32)
+        kept = np.asarray(ev).copy()
+        for t in range(T):
+            nz = np.nonzero(kept[t])[0]
+            kept[t, nz[3:]] = 0.0
+        np.testing.assert_array_equal(np.asarray(ev2), kept)
+        assert int(cut.n_events) == int(stream.n_events)
+        assert bool(events.step_overflowed(cut, T, 3)) == bool(
+            (counts > 3).any())
+
 
 class TestDenseBatchBlock:
     """Satellite: the dense kernel's batch-block pick. The old
