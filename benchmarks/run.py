@@ -16,6 +16,9 @@
                        and a run report under results/
   wafer                multi-chip weak scaling + routed events/s vs the
                        ~0.4M events/s bus budget
+  faults               defect-tolerance sweep: §5 reward vs injected
+                       fault rate, naive vs screened+blacklisted, plus
+                       the dead-link failover accounting
   roofline             §Roofline table from the dry-run artifacts
 
 Usage:
@@ -38,9 +41,9 @@ from repro.obs.report import jsonable as _jsonable
 
 def main() -> None:
     from benchmarks import (fig4_calibration, fig8_event_interface,
-                            fig11_rstdp, step_time, kernels_bench,
-                            ppuvm_bench, roofline_table, telemetry_bench,
-                            wafer_bench)
+                            fig11_rstdp, step_time, faults_bench,
+                            kernels_bench, ppuvm_bench, roofline_table,
+                            telemetry_bench, wafer_bench)
     suites = [
         ("fig4_calibration", fig4_calibration.run),
         ("fig8_event_interface", fig8_event_interface.run),
@@ -50,6 +53,7 @@ def main() -> None:
         ("ppuvm", ppuvm_bench.run),
         ("telemetry", telemetry_bench.run),
         ("wafer", wafer_bench.run),
+        ("faults", faults_bench.run),
         ("roofline", roofline_table.run),
     ]
     ap = argparse.ArgumentParser()

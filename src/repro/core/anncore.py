@@ -55,6 +55,7 @@ import jax.numpy as jnp
 
 from repro.configs.bss2 import BSS2Config
 from repro.core import adex, correlation, stp, synapse
+from repro.faults import inject as finject
 
 
 class AnnCoreState(NamedTuple):
@@ -100,6 +101,12 @@ class AnnCore:
     ``outputs["telemetry"]`` — spike/event totals plus the synaptic
     routing decisions. Off (the default) compiles to the exact
     pre-telemetry program; on/off outputs are bit-identical.
+    ``faults``: a ``repro.faults`` overlay (``None`` | ``FaultPlan`` |
+    tuple of plans, injection first, blacklist reduction last) applied
+    at the hook sites documented in ``repro.faults.inject``. ``None``
+    is the identity on every hook — the same-jaxpr off-path contract —
+    and a given overlay produces bit-identical outputs on every backend
+    (the hooks sit on backend-shared dataflow).
     """
 
     def __init__(self, cfg: BSS2Config, inst: Dict, backend: str = "auto",
@@ -108,7 +115,7 @@ class AnnCore:
                  kernel_block: int = 32, sparse_mode: str = "auto",
                  sparse_threshold: float = None,
                  sparse_max_events: int = None, sparse_k_cap: int = None,
-                 telemetry: bool = False):
+                 telemetry: bool = False, faults=None):
         self.cfg = cfg
         self.inst = inst
         if backend == "auto":
@@ -127,6 +134,7 @@ class AnnCore:
         self.sparse_max_events = sparse_max_events
         self.sparse_k_cap = sparse_k_cap
         self.telemetry = telemetry
+        self.faults = faults
 
     def init_state(self, prefix=()) -> AnnCoreState:
         cfg = self.cfg
@@ -147,23 +155,29 @@ class AnnCore:
         """
         cfg = self.cfg
         dt = cfg.dt
+        row_spikes = finject.rows(self.faults, row_spikes)
         eff = stp.efficacy(state.stp, row_spikes, u=cfg.stp_u,
                            offset=self.inst["stp_offset"],
                            calib_code=self.inst["stp_calib"])
         new_stp = stp.update(state.stp, row_spikes, u=cfg.stp_u,
                              tau_rec=cfg.stp_tau_rec, dt=dt)
 
-        # signed rows: even rows excitatory, odd rows inhibitory (Dale)
+        # signed rows: even rows excitatory, odd rows inhibitory (Dale);
+        # stuck SRAM cells override the stored weight at the analog read
+        w_read = finject.weights(self.faults, state.syn.weights)
         i_cols_exc = synapse.synaptic_current(
-            state.syn.weights[..., 0::2, :], state.syn.addresses[..., 0::2, :],
+            w_read[..., 0::2, :], state.syn.addresses[..., 0::2, :],
             eff[..., 0::2], row_addr[..., 0::2], self.inst["weight_gain"])
         i_cols_inh = synapse.synaptic_current(
-            state.syn.weights[..., 1::2, :], state.syn.addresses[..., 1::2, :],
+            w_read[..., 1::2, :], state.syn.addresses[..., 1::2, :],
             eff[..., 1::2], row_addr[..., 1::2], self.inst["weight_gain"])
 
         new_neuron, out_spikes = adex.step(
             state.neuron, i_cols_exc * 60.0 + ext_current, i_cols_inh * 60.0,
             self.inst["neuron_params"], dt, adex=cfg.neuron.adex)
+        # output-driver faults: hot forces 1, dead forces 0 — BEFORE the
+        # sensors and counters; the membrane keeps integrating unmasked
+        out_spikes = finject.spikes(self.faults, out_spikes)
 
         # sensor time constants ~ tau_syn: long traces let consecutive
         # pattern bursts sample each other's post-activity and flip the
@@ -202,6 +216,12 @@ class AnnCore:
         from repro.obs import trace as obs_trace
         if telemetry is None and self.telemetry:
             telemetry = obs_trace.init_telemetry()
+        # dead drivers zero their events before EVERY phase (STP, synaptic
+        # matmul, correlation pre-traces, telemetry census) — one shared
+        # hook site covers all backends; re-application inside the oracle
+        # ``step`` is an exact no-op (masking is idempotent)
+        row_spikes_t = finject.rows(self.faults, row_spikes_t)
+        telemetry = obs_trace.count_faults(telemetry, self.faults)
         if self.backend == "oracle":
             return self._run_oracle(state, row_spikes_t, row_addr_t,
                                     record_v=record_v, unroll=unroll or 1,
@@ -230,7 +250,8 @@ class AnnCore:
         state, out = self.run(state, ev, ad, record_v=record_v,
                               unroll=unroll, telemetry=telemetry)
         routed, tele = router.route(out["spikes"],
-                                    out.get("telemetry", telemetry))
+                                    out.get("telemetry", telemetry),
+                                    routed_in=routed_ev)
         out["routed"] = routed
         if tele is not None:
             out["telemetry"] = tele
@@ -288,19 +309,20 @@ class AnnCore:
         #    the synray kernel).
         syn = state.syn
         gain = inst["weight_gain"]
+        w_read = finject.weights(self.faults, syn.weights)
         sparse_kw = dict(sparse=self.sparse_mode,
                          sparse_threshold=self.sparse_threshold,
                          max_events=self.sparse_max_events,
                          k_cap=self.sparse_k_cap)
         i_exc_t = synapse.synaptic_current_window(
-            syn.weights[..., 0::2, :], syn.addresses[..., 0::2, :],
+            w_read[..., 0::2, :], syn.addresses[..., 0::2, :],
             eff_t[..., 0::2], row_addr_t[..., 0::2], gain,
             impl=self.kernel_impl, const_addr=self.const_addr,
             telemetry=telemetry, **sparse_kw)
         if telemetry is not None:
             i_exc_t, telemetry = i_exc_t
         i_inh_t = synapse.synaptic_current_window(
-            syn.weights[..., 1::2, :], syn.addresses[..., 1::2, :],
+            w_read[..., 1::2, :], syn.addresses[..., 1::2, :],
             eff_t[..., 1::2], row_addr_t[..., 1::2], gain,
             impl=self.kernel_impl, const_addr=self.const_addr,
             telemetry=telemetry, **sparse_kw)
@@ -361,6 +383,11 @@ class AnnCore:
             state.neuron, state.rate_counters, i_exc_t, i_inh_t,
             record_v, unroll)
         out_spikes_t = recs[0]
+        if self.faults is not None:
+            out_spikes_t = finject.spikes(self.faults, out_spikes_t)
+            rate_counters = finject.rates(self.faults, rate_counters,
+                                          state.rate_counters,
+                                          row_spikes_t.shape[0])
         new_corr = correlation.window(
             state.corr, row_spikes_t, out_spikes_t,
             tau_pre=cfg.neuron.tau_syn_exc, tau_post=cfg.neuron.tau_syn_exc,

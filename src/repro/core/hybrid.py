@@ -90,7 +90,7 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                     telemetry: bool = False, wafer: int = None,
                     wafer_topology: str = "all2all", wafer_relay: bool = True,
                     wafer_ctx=None, link_budget: int = None,
-                    link_mode: str = "auto"):
+                    link_mode: str = "auto", faults=None, blacklist=None):
     """Build the experiment closure set. Returns (init_fn, trial_fn, meta).
 
     The machine uses 2 rows per input (exc/inh pair, Dale's law: the PPU
@@ -149,6 +149,18 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     closed-loop half of the split-vs-monolithic contract. ``wafer_ctx``
     (a ``ShardingCtx``) turns on the shard_map link collectives;
     ``link_budget``/``link_mode`` are the router's bus-budget knobs.
+
+    ``faults``: a ``repro.faults.FaultPlan`` (or sequence) injected into
+    the emulated silicon — dead drivers/neurons, stuck weights, CADC
+    corruption, VM-store bit-flips, dead/flaky wafer links. ``None`` is
+    the identity: the fault-free experiment is the SAME jaxpr as before
+    the subsystem existed. ``blacklist``: a ``repro.faults.Blacklist``
+    (typically from ``repro.faults.screen``) applied ON TOP of the
+    faults as the graceful-degradation reduction — blacklisted rows /
+    neurons are masked exactly (``Blacklist.as_faults``), and
+    blacklisted LINKS re-route over an intermediate chip
+    (``repro.wafer.topology.reroute_plan``; forwarded traffic is counted
+    in the ``link_reroutes`` telemetry counter, never silent).
     """
     if cfg is None:
         cfg = dataclasses.replace(
@@ -165,13 +177,10 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
         prefix = (K,)
         plan = s5_column_plan(K, ecfg.n_inputs, ecfg.n_neurons,
                               relay=wafer_relay, kind=wafer_topology)
-        router = InterChipRouter(plan, ctx=wafer_ctx,
-                                 link_budget=link_budget,
-                                 link_mode=link_mode)
     else:
         c_loc = ecfg.n_neurons
         chip_cfg = cfg
-        router = None
+        plan = None
     mask_a, mask_b = _patterns(ecfg)
     mask_a, mask_b = jnp.asarray(mask_a), jnp.asarray(mask_b)
     even = (jnp.arange(ecfg.n_neurons) % 2 == 0).astype(jnp.float32)
@@ -203,9 +212,35 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
         block_size=block_size, trace_block=trace_block,
         kernel_block=kernel_block, sparse_mode=sparse_mode,
         sparse_threshold=sparse_threshold).items() if v is not None}
+    # fault overlay: injection plans first, the blacklist reduction last
+    # (its masks dominate the faults they cover — the exactness contract)
+    overlay = faults
+    if blacklist is not None and blacklist.total:
+        from repro.faults import chain as faults_chain
+        overlay = faults_chain(
+            faults, blacklist.as_faults(inst, cfg.cadc_bits)
+            if (blacklist.n_rows or blacklist.n_neurons) else None)
+        if blacklist.links:
+            assert K, "link blacklists need wafer mode"
+            from repro.faults.model import as_plans, remap_link_faults
+            from repro.wafer.topology import reroute_plan
+            old_links = plan.topology.links()
+            plan, _n_re = reroute_plan(plan, blacklist.links)
+            new_links = plan.topology.links()
+            if new_links != old_links:
+                # ring -> all2all promotion re-indexed the link space:
+                # carry injected link faults over by pair identity
+                overlay = tuple(remap_link_faults(p, old_links, new_links)
+                                for p in as_plans(overlay))
+    if K:
+        router = InterChipRouter(plan, ctx=wafer_ctx,
+                                 link_budget=link_budget,
+                                 link_mode=link_mode, faults=overlay)
+    else:
+        router = None
     core = AnnCore(chip_cfg, inst, backend=backend, kernel_impl=kernel_impl,
-                   const_addr=True, **block_kw)
-    ppu = VectorUnit(chip_cfg, inst)
+                   const_addr=True, faults=overlay, **block_kw)
+    ppu = VectorUnit(chip_cfg, inst, faults=overlay)
 
     def init(key) -> ExperimentState:
         st = core.init_state(prefix)
@@ -435,7 +470,8 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                  sparse_threshold: float = None, telemetry: bool = False,
                  wafer: int = None, wafer_topology: str = "all2all",
                  wafer_relay: bool = True, wafer_ctx=None,
-                 link_budget: int = None, link_mode: str = "auto"):
+                 link_budget: int = None, link_mode: str = "auto",
+                 faults=None, blacklist=None):
     """Full §5 experiment. Returns the metrics history (stacked).
 
     Modes:
@@ -463,7 +499,8 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                                         wafer_relay=wafer_relay,
                                         wafer_ctx=wafer_ctx,
                                         link_budget=link_budget,
-                                        link_mode=link_mode)
+                                        link_mode=link_mode,
+                                        faults=faults, blacklist=blacklist)
     state = init(jax.random.PRNGKey(seed + 1))
     stims = jnp.asarray(np.resize([1, 2, 0], n_trials), jnp.int32)
     if scan is None:

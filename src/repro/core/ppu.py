@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import cadc, synapse
 from repro.configs.bss2 import BSS2Config
+from repro.faults import inject as finject
 
 
 def _to_fixed_j(x):
@@ -34,9 +35,12 @@ def _to_fixed_j(x):
 
 
 class VectorUnit:
-    def __init__(self, cfg: BSS2Config, inst: Dict):
+    def __init__(self, cfg: BSS2Config, inst: Dict, faults=None):
         self.cfg = cfg
         self.inst = inst
+        # Fault overlay (repro.faults) — None is the identity on every
+        # hook, so the fault-free VectorUnit traces the same jaxpr.
+        self.faults = faults
 
     # -- observable reads ------------------------------------------------
     def read_correlation(self, corr_state, reset: bool = True):
@@ -47,7 +51,8 @@ class VectorUnit:
                            bits=self.cfg.cadc_bits, in_scale=8.0)
         qa = cadc.digitize(corr_state.a_acausal, offset=oc, gain=gc,
                            bits=self.cfg.cadc_bits, in_scale=8.0)
-        return qc, qa
+        return finject.cadc(self.faults, qc, qa,
+                            2 ** self.cfg.cadc_bits - 1)
 
     def read_rates(self, state):
         return state.rate_counters
@@ -116,6 +121,7 @@ class VectorUnit:
         w_new, regs = interp.run_program(
             jnp.asarray(words), state.syn.weights.astype(jnp.int32), qc, qa,
             state.rate_counters, mod_fp, noise_fp, executor=executor)
+        w_new = finject.store(self.faults, w_new)
         syn = state.syn._replace(weights=w_new.astype(jnp.int8))
         return self._reset_observables(state._replace(syn=syn)), regs
 

@@ -1,0 +1,13 @@
+"""Fault injection + defect tolerance for the emulated silicon:
+declarative ``FaultPlan`` overlays (``repro.faults.model``), jit-safe
+injection hooks threaded through the emulation (``repro.faults.inject``),
+and commissioning-style screening / blacklist reduction
+(``repro.faults.blacklist``)."""
+from repro.faults.blacklist import (Blacklist, cadc_zero_code, screen,
+                                    screen_chip, screen_links)
+from repro.faults.model import (FaultPlan, as_plans, chain,
+                                remap_link_faults, sample_fault_plan)
+
+__all__ = ["FaultPlan", "as_plans", "chain", "sample_fault_plan",
+           "remap_link_faults", "Blacklist", "cadc_zero_code", "screen",
+           "screen_chip", "screen_links"]

@@ -1,0 +1,201 @@
+"""Commissioning-style screening and graceful degradation.
+
+The flow mirrors the BrainScaleS machine-room commissioning loop: run
+probe stimuli against the (possibly faulted) chip, census the telemetry
+observables the real system has (rate counters, CADC codes, per-link
+bus censuses), and derive a ``Blacklist`` of unusable rows / neurons /
+links. Degradation is then *exact by construction*:
+
+  * ``Blacklist.as_faults`` turns the blacklist into a REDUCTION
+    ``FaultPlan`` (``is_blacklist=True``): blacklisted rows become dead
+    rows, blacklisted neurons dead neurons with their CADC columns
+    pinned to the code a zero accumulator digitizes to, and every
+    blacklisted synapse's PPU-VM store forced to zero. Threading
+    ``chain(faults, blacklist.as_faults(...))`` therefore emulates the
+    faulted chip *under* its blacklist — and because the reduction masks
+    are applied after (and dominate) every fault they cover, the result
+    is bit-identical to emulating the clean reduced network
+    (``chain(blacklist.as_faults(...))`` alone): the exactness contract
+    ``tests/test_faults.py`` asserts with ``assert_array_equal``.
+  * Dead links do not reduce — they re-route: ``repro.wafer.topology.
+    reroute_plan`` moves the affected routes over an intermediate chip
+    (reusing bus traffic the intermediate already receives where
+    possible), and the router counts every forwarded event in
+    ``link_reroutes`` — degradation on the bus is never silent either.
+
+Screening is host-side orchestration of jitted probe runs; nothing here
+is traced into the training program.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.faults.model import FaultPlan
+
+
+def cadc_zero_code(inst, cadc_bits: int = 8) -> np.ndarray:
+    """[.., C] code a ZERO correlation accumulator digitizes to under the
+    instance's calibration (``cadc.digitize(0) = clip(round(offset))``) —
+    the baseline every CADC probe compares against. Calibration precedes
+    screening on the real system, so the expected baseline is known."""
+    off = np.asarray(inst["cadc_offset"], np.float64)
+    return np.clip(np.round(off), 0, 2 ** cadc_bits - 1).astype(np.int32)
+
+
+@dataclass(frozen=True)
+class Blacklist:
+    """Per-neuron / per-row / per-link screening verdict.
+
+    ``rows`` [.., R] / ``neurons`` [.., C] bool follow the core's
+    instance-prefix shapes; ``links`` are (src_chip, dst_chip) pairs —
+    topology-order-independent, so a reroute that re-indexes the link
+    space cannot invalidate them."""
+    rows: np.ndarray
+    neurons: np.ndarray
+    links: Tuple[Tuple[int, int], ...] = field(default_factory=tuple)
+
+    def __post_init__(self):
+        object.__setattr__(self, "rows", np.asarray(self.rows, bool))
+        object.__setattr__(self, "neurons", np.asarray(self.neurons, bool))
+        object.__setattr__(self, "links",
+                           tuple((int(s), int(d)) for s, d in self.links))
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.rows.sum())
+
+    @property
+    def n_neurons(self) -> int:
+        return int(self.neurons.sum())
+
+    @property
+    def n_links(self) -> int:
+        return len(self.links)
+
+    @property
+    def total(self) -> int:
+        return self.n_rows + self.n_neurons + self.n_links
+
+    def union(self, other: "Blacklist") -> "Blacklist":
+        return Blacklist(rows=self.rows | other.rows,
+                         neurons=self.neurons | other.neurons,
+                         links=tuple(sorted(set(self.links)
+                                            | set(other.links))))
+
+    def as_faults(self, inst, cadc_bits: int = 8) -> FaultPlan:
+        """The graceful-degradation reduction overlay (see module
+        docstring). ``store_zero`` covers the union of blacklisted rows
+        and columns so VM stores cannot resurrect masked synapses."""
+        zero = (self.rows[..., :, None] | self.neurons[..., None, :])
+        return FaultPlan(
+            dead_rows=self.rows if self.n_rows else None,
+            dead_neurons=self.neurons if self.n_neurons else None,
+            cadc_stuck_mask=self.neurons if self.n_neurons else None,
+            cadc_stuck_code=(cadc_zero_code(inst, cadc_bits)
+                             if self.n_neurons else None),
+            store_zero=zero if zero.any() else None,
+            is_blacklist=True)
+
+
+# ---------------------------------------------------------------------------
+# Probe-based screening
+# ---------------------------------------------------------------------------
+
+def screen_chip(core, ppu, probe_steps: int = 64, margin: int = 2,
+                drive_weight: int = 63) -> Blacklist:
+    """Screen one (possibly faulted) core + vector unit with the two
+    commissioning probes:
+
+      silent probe   no stimulus: neurons that still fire are HOT
+                     (stuck output drivers); CADC columns whose codes
+                     stray more than ``margin`` from the calibrated
+                     zero baseline are corrupted readouts.
+      drive probe    every row fires every dt with excitatory weights at
+                     ``drive_weight``: healthy neurons must spike (DEAD
+                     otherwise), and every healthy driver row must show
+                     causal CADC signal on the healthy columns — rows
+                     stuck at the zero baseline are dead drivers.
+
+    Probes run through the SAME faulted observables the production run
+    would see (``core.run`` + ``ppu.read_correlation``), so detection is
+    telemetry-census-based, not oracle-based."""
+    cfg = core.cfg
+    R, C = cfg.n_rows, cfg.n_cols
+    base = cadc_zero_code(ppu.inst, cfg.cadc_bits)      # [.., C]
+    prefix = base.shape[:-1]
+    run = jax.jit(core.run)
+
+    def probe(ev_value, w_plane):
+        st = core.init_state(prefix)
+        if w_plane is not None:
+            w = jnp.broadcast_to(jnp.asarray(w_plane, jnp.int8),
+                                 (*prefix, R, C))
+            st = st._replace(syn=st.syn._replace(weights=w))
+        ev = jnp.full((probe_steps, *prefix, R), ev_value, jnp.float32)
+        ad = jnp.zeros((probe_steps, *prefix, R), jnp.int8)
+        st, _ = run(st, ev, ad)
+        qc, qa = ppu.read_correlation(st.corr)
+        return (np.asarray(st.rate_counters), np.asarray(qc),
+                np.asarray(qa))
+
+    # silent probe: hot neurons + corrupted CADC columns
+    rates0, qc0, qa0 = probe(0.0, None)
+    hot = rates0 > 0.0
+    dev = np.maximum(np.abs(qc0 - base[..., None, :]),
+                     np.abs(qa0 - base[..., None, :])).max(axis=-2)
+    cadc_bad = dev > margin
+
+    # drive probe: excitatory rows at full weight (odd/inhibitory rows
+    # stay at zero weight but still forward events, so their drivers
+    # leave causal traces too)
+    w_plane = np.zeros((R, C), np.int8)
+    w_plane[0::2, :] = np.int8(drive_weight)
+    rates1, qc1, _ = probe(1.0, w_plane)
+    dead_n = (rates1 <= 0.0) & ~hot
+
+    neurons = hot | dead_n | cadc_bad
+    good = ~neurons                                     # [.., C]
+    if not good.any():
+        # nothing to measure rows against — refuse to guess
+        return Blacklist(rows=np.zeros((*prefix, R), bool),
+                         neurons=neurons)
+    delta = qc1 - base[..., None, :]                    # [.., R, C]
+    dead_rows = np.where(good[..., None, :], delta,
+                         0).max(axis=-1) <= margin
+    return Blacklist(rows=dead_rows, neurons=neurons)
+
+
+def screen_links(router, probe_steps: int = 32,
+                 min_ratio: float = 0.95) -> Tuple[Tuple[int, int], ...]:
+    """Screen the inter-chip bus: every column spiking every dt, then
+    compare the faulted router's per-link delivered census against a
+    clean router on the same plan. A link delivering less than
+    ``min_ratio`` of its expected census is dead or flaky — returned as
+    (src_chip, dst_chip) pairs for the blacklist."""
+    from repro.wafer.router import InterChipRouter
+    out = jnp.ones((probe_steps, router.K, router.C), jnp.float32)
+    n_f = np.asarray(router.link_census(out))
+    clean = InterChipRouter(router.plan, link_budget=router.link_budget,
+                            link_step_budget=router.link_step_budget,
+                            link_mode=router.link_mode)
+    n_c = np.asarray(clean.link_census(out))
+    bad = (n_c > 0) & (n_f < min_ratio * n_c)
+    links = router.plan.topology.links()
+    return tuple(links[l] for l in np.nonzero(bad)[0])
+
+
+def screen(core, ppu, router=None, probe_steps: int = 64,
+           margin: int = 2, min_ratio: float = 0.95) -> Blacklist:
+    """Full screening pass: chip probes plus (when a router is given)
+    the link census probe."""
+    bl = screen_chip(core, ppu, probe_steps=probe_steps, margin=margin)
+    if router is not None:
+        links = screen_links(router, probe_steps=min(probe_steps, 32),
+                             min_ratio=min_ratio)
+        bl = Blacklist(rows=bl.rows, neurons=bl.neurons, links=links)
+    return bl

@@ -1,0 +1,179 @@
+"""Fault-injection hooks threaded through the emulation stack.
+
+Each hook takes the ``faults`` overlay (``None`` | ``FaultPlan`` | tuple
+of plans, see ``repro.faults.model.as_plans``) and one value of the
+existing dataflow, and returns that value with the plans' defects
+applied *in order*. The contract mirrors PR 7's telemetry pattern:
+
+  * ``faults=None`` (or a plan without the relevant field) emits ZERO
+    ops — the hook returns its argument object untouched, so the
+    disabled program is the SAME jaxpr as before the subsystem existed
+    (asserted across oracle/fused/blocked/sparse backends in
+    ``tests/test_faults.py``).
+  * All plan arrays are host constants closed over at trace time —
+    nothing dynamic rides the scan carry, nothing retraces.
+  * Hook placement is chosen so every backend sees identical fault
+    semantics (the windowed backends apply per-window what the oracle
+    applies per dt — see the induction notes at each hook).
+
+Hook sites:
+
+  rows      ``AnnCore.run``/``step`` entry — dead drivers zero their
+            events BEFORE STP, the synaptic matmul, the correlation
+            pre-traces and the telemetry census (one shared hook works
+            for every backend because all phases consume the stream).
+  weights   the analog synapse READ (``step`` / ``_window_currents``):
+            stuck SRAM cells override the stored value each time the
+            crossbar is read — PPU writes still land in the array, the
+            read just keeps not seeing them.
+  spikes    after the neuron phase, before rate counters, correlation
+            update and the router: hot drivers force 1, dead drivers
+            force 0. Membrane state keeps integrating unmasked (the
+            defect sits on the spike output, not the soma) — identical
+            op trees in every backend.
+  rates     the windowed backends' rate-counter fixup matching what the
+            oracle accumulates per step from hooked spikes:
+            ``rc = where(hot, rc_in + T, rc) * alive`` per plan.
+  cadc      ``VectorUnit.read_correlation`` — code offsets then stuck
+            codes, clipped to the ADC range.
+  store     ``VectorUnit.run_program_fixed`` — XOR bit-flips then the
+            blacklist zero-mask on every PPU-VM weight store.
+  links     the router's per-link delivery grids before census and
+            exchange — dead links carry nothing, flaky links drop a
+            deterministic hash-selected fraction of (t, row) slots.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.faults.model import as_plans
+
+
+def rows(faults, row_spikes_t):
+    """[T?, .., R] driver events — dead rows forward nothing."""
+    for p in as_plans(faults):
+        if p.dead_rows is not None:
+            alive = jnp.asarray(~p.dead_rows, row_spikes_t.dtype)
+            row_spikes_t = row_spikes_t * alive
+    return row_spikes_t
+
+
+def weights(faults, w):
+    """[.., R, C] synapse weights at the analog read."""
+    for p in as_plans(faults):
+        if p.stuck_w_mask is not None:
+            w = jnp.where(jnp.asarray(p.stuck_w_mask),
+                          jnp.asarray(p.stuck_w_val, w.dtype), w)
+    return w
+
+
+def spikes(faults, out_spikes):
+    """[T?, .., C] neuron output spikes — hot forces 1, dead forces 0."""
+    for p in as_plans(faults):
+        if p.hot_neurons is not None:
+            out_spikes = jnp.where(jnp.asarray(p.hot_neurons),
+                                   jnp.ones((), out_spikes.dtype),
+                                   out_spikes)
+        if p.dead_neurons is not None:
+            alive = jnp.asarray(~p.dead_neurons, out_spikes.dtype)
+            out_spikes = out_spikes * alive
+    return out_spikes
+
+
+def rates(faults, rc, rc_in, n_steps: int):
+    """Window-level rate-counter twin of ``spikes``: ``rc`` is the raw
+    windowed accumulation ``rc_in + sum(raw spikes)``; a hot column
+    accumulated exactly ``n_steps`` hooked spikes, a dead column zero
+    (its carry-in is zero by induction — counters start at zero and
+    every window ends masked)."""
+    for p in as_plans(faults):
+        if p.hot_neurons is not None:
+            hot = jnp.asarray(p.hot_neurons)
+            rc = jnp.where(hot, rc_in + jnp.asarray(n_steps, rc.dtype), rc)
+        if p.dead_neurons is not None:
+            rc = rc * jnp.asarray(~p.dead_neurons, rc.dtype)
+    return rc
+
+
+def cadc(faults, qc, qa, cadc_max: int):
+    """[.., R, C] CADC codes: additive code errors then stuck codes.
+    Column planes broadcast over the row axis."""
+    for p in as_plans(faults):
+        if p.cadc_code_offset is not None:
+            off = jnp.asarray(p.cadc_code_offset)[..., None, :]
+            qc = jnp.clip(qc + off, 0, cadc_max)
+            qa = jnp.clip(qa + off, 0, cadc_max)
+        if p.cadc_stuck_mask is not None:
+            m = jnp.asarray(p.cadc_stuck_mask)[..., None, :]
+            code = jnp.asarray(p.cadc_stuck_code)[..., None, :]
+            qc = jnp.where(m, code, qc)
+            qa = jnp.where(m, code, qa)
+    return qc, qa
+
+
+def store(faults, w_new):
+    """[.., R, C] int32 weights on the PPU-VM store path (before the
+    6-bit cast): XOR bit-flips, then the blacklist zero-mask."""
+    for p in as_plans(faults):
+        if p.store_flip is not None:
+            w_new = jnp.bitwise_xor(w_new,
+                                    jnp.asarray(p.store_flip, w_new.dtype))
+        if p.store_zero is not None:
+            w_new = jnp.where(jnp.asarray(p.store_zero),
+                              jnp.zeros((), w_new.dtype), w_new)
+    return w_new
+
+
+def _hash_u32(x):
+    """Deterministic 32-bit integer mix (splitmix-style finalizer)."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7feb352d)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846ca68b)
+    return x ^ (x >> 16)
+
+
+def link_keep(p, T: int, R: int, link_ids):
+    """[T, Lx, R] keep factor for one plan's link faults: 0.0 on dead
+    links; on flaky links a per-(t, link, row) deterministic coin —
+    hashed from (t, row, absolute link id, plan seed), NOT a carried
+    PRNG, so the drop pattern is identical for the local and shard_map
+    transports and independent of window batching."""
+    keep = None
+    lid = jnp.asarray(link_ids, jnp.uint32)            # [Lx] absolute ids
+    if p.flaky_links is not None:
+        fl = jnp.asarray(p.flaky_links)[link_ids]      # [Lx]
+        tr = (jnp.arange(T, dtype=jnp.uint32)[:, None, None]
+              * jnp.uint32(R)
+              + jnp.arange(R, dtype=jnp.uint32)[None, None, :])
+        h = _hash_u32(tr * jnp.uint32(0x9e3779b1)
+                      + (lid[None, :, None] + 1) * jnp.uint32(0x85ebca77)
+                      + jnp.uint32(np.uint32(p.seed)))
+        u = (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+        keep = (u >= fl[None, :, None]).astype(jnp.float32)
+    if p.dead_links is not None:
+        alive = jnp.asarray(~p.dead_links,
+                            jnp.float32)[link_ids][None, :, None]
+        keep = alive if keep is None else keep * alive
+    return keep
+
+
+def links(faults, grids, link_ids):
+    """[T, Lx, R] per-link delivery grids; ``link_ids`` are the absolute
+    link indices of the Lx slots (the sharded transport passes its local
+    block's offsets)."""
+    plans = [p for p in as_plans(faults)
+             if p.dead_links is not None or p.flaky_links is not None]
+    if not plans:
+        return grids
+    T, R = grids.shape[0], grids.shape[2]
+    for p in plans:
+        keep = link_keep(p, T, R, link_ids)
+        if keep is not None:
+            grids = grids * keep
+    return grids
+
+
+def has_link_faults(faults) -> bool:
+    return any(p.dead_links is not None or p.flaky_links is not None
+               for p in as_plans(faults))

@@ -52,6 +52,19 @@ Counter catalogue (see README "Observability" for the full matrix):
                            weight-update count, largest |dw| (weight
                            LSBs), and a fixed-bin |dw| magnitude
                            histogram over all synapses and trials
+  faults_injected          gauge: active fault SITES of the threaded
+                           injection ``FaultPlan`` chain (stuck cells +
+                           dead rows/neurons + CADC/store/link faults) —
+                           any faulted run announces itself here
+  faults_detected / blacklisted_rows
+                           gauges: entries of the threaded *blacklist*
+                           reduction plan (rows + neurons + links, and
+                           the row count alone) — degradation is never
+                           silent, same contract as the overflow paths
+  link_reroutes            inter-chip events delivered through a
+                           failover FORWARD rule (``WaferPlan`` reroute
+                           around a dead link) instead of their original
+                           route — counts the rerouted bus traffic
 """
 from __future__ import annotations
 
@@ -71,7 +84,9 @@ _I32_FIELDS = ("steps", "trials", "in_events", "out_spikes",
                "dense_windows", "sparse_windows", "gated_windows",
                "overflow_fallbacks", "census_events_max", "census_k_max",
                "routed_events", "link_overflows", "link_events_max",
-               "vm_runs", "vm_sat_hits", "dw_updates")
+               "vm_runs", "vm_sat_hits", "dw_updates",
+               "faults_injected", "faults_detected", "blacklisted_rows",
+               "link_reroutes")
 
 
 class Telemetry(NamedTuple):
@@ -92,6 +107,10 @@ class Telemetry(NamedTuple):
     vm_runs: jnp.ndarray             # [] i32 PPU-VM program executions
     vm_sat_hits: jnp.ndarray         # [] i32 register lanes on the rails
     dw_updates: jnp.ndarray          # [] i32 weight-update applications
+    faults_injected: jnp.ndarray     # [] i32 gauge: injected fault sites
+    faults_detected: jnp.ndarray     # [] i32 gauge: blacklist entries
+    blacklisted_rows: jnp.ndarray    # [] i32 gauge: blacklisted rows
+    link_reroutes: jnp.ndarray       # [] i32 events on failover forwards
     dw_abs_max: jnp.ndarray          # [] f32 largest |dw| seen (LSBs)
     dw_hist: jnp.ndarray             # [DW_BINS] i32 |dw| histogram
 
@@ -220,6 +239,47 @@ def count_dw(tele: Optional[Telemetry], w_old, w_new
         dw_updates=tele.dw_updates + 1,
         dw_abs_max=jnp.maximum(tele.dw_abs_max, jnp.max(dw)),
         dw_hist=tele.dw_hist.at[idx].add(1))
+
+
+def count_faults(tele: Optional[Telemetry], faults) -> Optional[Telemetry]:
+    """Announce the threaded fault overlays (``repro.faults``): gauges set
+    by ``maximum`` so every hook site (AnnCore window, router exchange,
+    VM store) reports the same totals without double counting. Injection
+    plans land in ``faults_injected`` (their active site count), blacklist
+    reduction plans in ``faults_detected``/``blacklisted_rows``. All
+    counts are host constants of the plan — identity on ``None`` faults
+    AND on ``None`` telemetry, so the off path stays the same jaxpr."""
+    if tele is None or faults is None:
+        return None if tele is None else tele
+    from repro.faults.model import as_plans
+    inj = det = rows = 0
+    for p in as_plans(faults):
+        if p.is_blacklist:
+            det += p.total_sites
+            rows += p.n_dead_rows
+        else:
+            inj += p.total_sites
+    if inj:
+        tele = tele._replace(faults_injected=jnp.maximum(
+            tele.faults_injected, jnp.int32(inj)))
+    if det:
+        tele = tele._replace(
+            faults_detected=jnp.maximum(tele.faults_detected,
+                                        jnp.int32(det)),
+            blacklisted_rows=jnp.maximum(tele.blacklisted_rows,
+                                         jnp.int32(rows)))
+    return tele
+
+
+def count_reroutes(tele: Optional[Telemetry], n_fwd) -> Optional[Telemetry]:
+    """One routing exchange's failover traffic: ``n_fwd`` is the event
+    census of the forward-rule delivery grids (events a ``WaferPlan``
+    reroute carried around a dead link). Identity on ``None`` telemetry
+    or when the plan has no forward rules (``n_fwd is None``)."""
+    if tele is None or n_fwd is None:
+        return tele
+    return tele._replace(
+        link_reroutes=tele.link_reroutes + n_fwd.astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------

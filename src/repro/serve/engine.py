@@ -39,6 +39,7 @@ class ServeEngine:
         self._decode = jax.jit(self.bundle.decode_step, donate_argnums=(1,),
                                **decode_kw)
         self._prefill = jax.jit(self.bundle.prefill, **prefill_kw)
+        self._n_calls = 0   # per-call sampling-key derivation (see generate)
 
     def generate(self, params, prompts: jnp.ndarray, n_new: int,
                  temperature: float = 0.0, key=None,
@@ -50,9 +51,17 @@ class ServeEngine:
         ``prefill`` / ``decode`` spans (block_until_ready-bracketed), so
         serving latency splits show up in the same run reports as the
         emulation phases. ``None`` changes nothing.
+
+        Sampling (``temperature > 0``) without an explicit ``key`` derives
+        a fresh key per call from an engine-local counter — repeated calls
+        draw different samples; pass ``key`` for reproducible draws.
         """
         b, s0 = prompts.shape
         pl_ = prefix_len(self.arch)
+        if s0 + pl_ + n_new > self.max_len:
+            raise ValueError(
+                f"request overruns the KV cache: prompt {s0} + prefix "
+                f"{pl_} + {n_new} new tokens > max_len {self.max_len}")
         batch = dict(tokens=prompts)
         if self.arch.vit_dim:
             batch["patch_embeds"] = jnp.zeros(
@@ -76,7 +85,10 @@ class ServeEngine:
         out = []
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         if temperature > 0:
-            key = key if key is not None else jax.random.PRNGKey(0)
+            if key is None:
+                key = jax.random.fold_in(jax.random.PRNGKey(0),
+                                         self._n_calls)
+            self._n_calls += 1
 
         def decode_loop():
             nonlocal tok, cache, logits, key

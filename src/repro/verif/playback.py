@@ -126,18 +126,24 @@ class FastBackend:
     windows, sparse-gate decisions, VM runs and saturation-rail hits —
     readable via ``telemetry_summary()``. The emitted trace is
     bit-identical either way.
+
+    ``faults``: a ``repro.faults`` overlay injected into core + vector
+    unit — the co-simulation contract extends to faulted silicon: both
+    backends model the same defect realisation, so their traces still
+    match.
     """
 
     def __init__(self, cfg: BSS2Config, inst=None,
-                 ppu_executor: str = "auto", telemetry: bool = False):
+                 ppu_executor: str = "auto", telemetry: bool = False,
+                 faults=None):
         from repro.obs import trace as obs_trace
 
         self.cfg = cfg
         self.inst = inst or ideal_instance(cfg)
-        self.core = AnnCore(cfg, self.inst)
+        self.core = AnnCore(cfg, self.inst, faults=faults)
         self.state = self.core.init_state()
         self._pending: List[Tuple[np.ndarray, np.ndarray]] = []
-        self._ppu = VectorUnit(cfg, self.inst)
+        self._ppu = VectorUnit(cfg, self.inst, faults=faults)
         self.ppu_executor = ppu_executor
         self._ppu_prog = None
         self._ppu_run = None
@@ -241,9 +247,15 @@ class FastBackend:
 
 class RefBackend:
     """Independent straight-loop NumPy implementation of the same machine
-    (LIF + exp term, STP, address-matched synapses, correlation sensors)."""
+    (LIF + exp term, STP, address-matched synapses, correlation sensors).
 
-    def __init__(self, cfg: BSS2Config, inst=None):
+    ``faults`` applies the same ``repro.faults`` overlay as the fast
+    backend, re-implemented as straight NumPy at the same hook sites —
+    the independence of the reference extends to the fault model."""
+
+    def __init__(self, cfg: BSS2Config, inst=None, faults=None):
+        from repro.faults.model import as_plans
+        self.faults = as_plans(faults)
         self.cfg = cfg
         inst = inst or ideal_instance(cfg)
         self.p = {k: np.asarray(v) for k, v in inst["neuron_params"].items()}
@@ -277,6 +289,9 @@ class RefBackend:
     def _step(self, ev, ad):
         cfg, p, dt = self.cfg, self.p, self.cfg.dt
         from repro.core.stp import CALIB_STEP, CALIB_BITS
+        for fp in self.faults:                 # dead synapse drivers
+            if fp.dead_rows is not None:
+                ev = ev * (~fp.dead_rows).astype(np.float32)
         trim = ((self.stp_calib.astype(np.float32) - 2 ** (CALIB_BITS - 1))
                 * np.float32(CALIB_STEP))
         eff = np.clip(cfg.stp_u * self.stp_r * (1.0 + self.stp_offset - trim),
@@ -285,11 +300,17 @@ class RefBackend:
             self.stp_r + (1 - self.stp_r) * (1 - np.exp(-dt / cfg.stp_tau_rec))
             - cfg.stp_u * self.stp_r * ev, 0.0, 1.0)
 
+        w_read = self.w
+        for fp in self.faults:                 # stuck cells at the read
+            if fp.stuck_w_mask is not None:
+                w_read = np.where(fp.stuck_w_mask,
+                                  fp.stuck_w_val.astype(w_read.dtype),
+                                  w_read)
         i_cols = np.zeros((2, cfg.n_cols))
         for half in (0, 1):
             rows = slice(half, None, 2)
             match = (self.addr[rows] == ad[rows][:, None])
-            weff = self.w[rows].astype(np.float32) * match
+            weff = w_read[rows].astype(np.float32) * match
             i_cols[half] = (weff * eff[rows][:, None]).sum(0) * self.gain
 
         de = np.exp(-dt / p["tau_syn_exc"])
@@ -320,6 +341,11 @@ class RefBackend:
                                np.maximum(self.refrac - dt, 0.0))
         self.v, self.wad = v, wad
         sp = spikes.astype(np.float32)
+        for fp in self.faults:                 # output-driver faults: the
+            if fp.hot_neurons is not None:     # membrane above integrated
+                sp = np.where(fp.hot_neurons, np.float32(1.0), sp)
+            if fp.dead_neurons is not None:    # unmasked, like AnnCore
+                sp = sp * (~fp.dead_neurons).astype(np.float32)
 
         # correlation sensors (nominal scalar tau, as in AnnCore.step)
         tau = cfg.neuron.tau_syn_exc
@@ -336,7 +362,14 @@ class RefBackend:
         """NumPy twin of cadc.digitize as used by VectorUnit (in_scale=8)."""
         lsb = 2 ** self.cfg.cadc_bits - 1
         code = a * (self.cadc_gain[None, :] * 8.0) + self.cadc_offset[None, :]
-        return np.clip(np.round(code), 0, lsb).astype(np.int32)
+        q = np.clip(np.round(code), 0, lsb).astype(np.int32)
+        for fp in self.faults:                 # corrupted CADC columns
+            if fp.cadc_code_offset is not None:
+                q = np.clip(q + fp.cadc_code_offset[None, :], 0, lsb)
+            if fp.cadc_stuck_mask is not None:
+                q = np.where(fp.cadc_stuck_mask[None, :],
+                             fp.cadc_stuck_code[None, :], q)
+        return q
 
     def _ppu_run(self, mod_fp, noise_fp):
         from repro.ppuvm.interp import run_program_np
@@ -347,6 +380,11 @@ class RefBackend:
         qa = self._cadc_digitize(self.a_acausal)
         w_new, _ = run_program_np(self.ppu_prog, self.w.astype(np.int32),
                                   qc, qa, self.rates, mod_fp, noise_fp)
+        for fp in self.faults:                 # store-path faults
+            if fp.store_flip is not None:
+                w_new = w_new ^ fp.store_flip.astype(w_new.dtype)
+            if fp.store_zero is not None:
+                w_new = np.where(fp.store_zero, 0, w_new)
         self.w = w_new.astype(np.int8)
         # post-read observable reset, like VectorUnit._reset_observables
         self.rates = np.zeros_like(self.rates)
@@ -390,16 +428,19 @@ class RefBackend:
 
 
 def execute(program: List[Instr], backend: str, cfg: BSS2Config, inst=None,
-            ppu_executor: str = "auto", telemetry: bool = False):
+            ppu_executor: str = "auto", telemetry: bool = False,
+            faults=None):
     """Run a playback program. ``backend`` is "fast" (jitted machine
     model) or "ref" (independent NumPy loop); ``ppu_executor`` picks the
     fast backend's PPU-VM executor (ignored by "ref", which always runs
     the independent NumPy interpreter). ``telemetry`` threads the
     fast backend's counter pytree (ignored by "ref" — the independent
-    reference stays uninstrumented by design)."""
+    reference stays uninstrumented by design). ``faults`` injects the
+    same ``repro.faults`` overlay into either backend — co-simulation of
+    the defect realisation itself."""
     be = (FastBackend(cfg, inst, ppu_executor=ppu_executor,
-                      telemetry=telemetry)
-          if backend == "fast" else RefBackend(cfg, inst))
+                      telemetry=telemetry, faults=faults)
+          if backend == "fast" else RefBackend(cfg, inst, faults=faults))
     return be.execute(program)
 
 

@@ -4,8 +4,8 @@ inter-chip event router (see ``repro.wafer.topology`` /
 from repro.wafer.router import InterChipRouter, run_windows
 from repro.wafer.topology import (WaferPlan, WaferTopology, make_plan,
                                   monolithic_plan, monolithic_weights,
-                                  s5_column_plan)
+                                  reroute_plan, s5_column_plan)
 
 __all__ = ["InterChipRouter", "run_windows", "WaferPlan", "WaferTopology",
            "make_plan", "monolithic_plan", "monolithic_weights",
-           "s5_column_plan"]
+           "reroute_plan", "s5_column_plan"]

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import events
+from repro.faults import inject as finject
 from repro.obs import trace as obs_trace
 from repro.wafer.topology import WaferPlan
 
@@ -69,18 +70,29 @@ class InterChipRouter:
     when its instance rule is a single mesh axis that evenly divides the
     chip count; anything else degrades to the local transport (the same
     graceful degradation as ``ShardingCtx._pspec``).
+    ``faults``: a ``repro.faults`` overlay — dead links deliver nothing,
+    flaky links drop a deterministic hash-selected fraction of events
+    (identical under the local and shard_map transports). ``None`` is
+    the identity (no extra ops).
+
+    When the plan carries FORWARD rules (``reroute_plan`` failover),
+    pass last window's delivered grid as ``route(..., routed_in=...)``:
+    each forwarding chip re-transmits the events its relay row received,
+    so rerouted traffic lands one window after the direct route would
+    have — and is counted in the ``link_reroutes`` telemetry counter.
     """
 
     def __init__(self, plan: WaferPlan, ctx=None,
                  link_budget: Optional[int] = None,
                  link_step_budget: Optional[int] = None,
-                 link_mode: str = "auto"):
+                 link_mode: str = "auto", faults=None):
         if link_mode not in ("auto", "compact", "dense"):
             raise ValueError(f"unknown link_mode {link_mode!r}")
         self.plan = plan
         self.link_mode = link_mode
         self.link_budget = link_budget
         self.link_step_budget = link_step_budget
+        self.faults = faults
         topo = plan.topology
         self.K, self.R, self.C = topo.n_chips, plan.n_rows, plan.n_cols
         links = topo.links()
@@ -105,11 +117,33 @@ class InterChipRouter:
         self.link_dst = jnp.asarray(dst)
         self.link_from = jnp.asarray([s for s, _ in links])
         self.link_to = jnp.asarray([d for _, d in links])
+        # forward tables (failover hops): same padded-ragged layout, but
+        # the gather source is a ROW of the previous window's delivered
+        # grid instead of a spike column
+        per_fwd = {l: [] for l in range(self.L)}
+        for i in range(plan.n_forwards):
+            l = link_id[(int(plan.fwd_src_chip[i]),
+                         int(plan.fwd_dst_chip[i]))]
+            per_fwd[l].append((int(plan.fwd_src_row[i]),
+                               int(plan.fwd_dst_row[i])))
+        mf = max((len(v) for v in per_fwd.values()), default=0)
+        self.MF = max(mf, 1)
+        fsrc = np.zeros((self.L, self.MF), np.int32)
+        fdst = np.full((self.L, self.MF), self.R, np.int32)
+        for l, v in per_fwd.items():
+            for j, (sr, dr) in enumerate(v):
+                fsrc[l, j], fdst[l, j] = sr, dr
+        self.fwd_src = jnp.asarray(fsrc)
+        self.fwd_dst = jnp.asarray(fdst)
         # per-link delivery address grid (addresses ride with the records)
         ag = np.zeros((self.L, self.R), np.int8)
         for i in range(plan.n_routes):
             l = link_id[(int(plan.src_chip[i]), int(plan.dst_chip[i]))]
             ag[l, int(plan.dst_row[i])] = np.int8(plan.addr[i])
+        for i in range(plan.n_forwards):
+            l = link_id[(int(plan.fwd_src_chip[i]),
+                         int(plan.fwd_dst_chip[i]))]
+            ag[l, int(plan.fwd_dst_row[i])] = np.int8(plan.fwd_addr[i])
         self.link_addr = jnp.asarray(ag)
         # receiver-side planes for merge()
         self.dst_addr = jnp.asarray(plan.dst_addr_grid())      # [K, R] int8
@@ -174,9 +208,20 @@ class InterChipRouter:
         return jnp.moveaxis(ev, 0, 1)                      # [T, Lx, R]
 
     # -- local transport -----------------------------------------------------
-    def _route_local(self, out, T, budget, step_budget):
+    def _route_local(self, out, T, budget, step_budget, routed_in=None):
         grids = self._link_grids(out[:, self.link_from], self.link_src,
                                  self.link_dst)
+        n_fwd = None
+        if routed_in is not None:
+            # failover hops: re-transmit what the relay rows received last
+            # window; merged BEFORE census so the bus budget covers the
+            # rerouted traffic too
+            fgrids = self._link_grids(routed_in[:, self.link_from],
+                                      self.fwd_src, self.fwd_dst)
+            n_f, _ = self._census(fgrids)
+            n_fwd = jnp.sum(n_f)
+            grids = jnp.maximum(grids, fgrids)
+        grids = finject.links(self.faults, grids, np.arange(self.L))
         n, kmax = self._census(grids)
         fits = events.census_fits(n, kmax, budget, step_budget)
 
@@ -192,16 +237,17 @@ class InterChipRouter:
             delivered = jax.lax.cond(jnp.all(fits), compact, lambda: grids)
         routed = jnp.zeros((T, self.K, self.R), jnp.float32).at[
             :, self.link_to, :].max(delivered)
-        return routed, n, fits
+        return routed, n, fits, n_fwd
 
     # -- shard_map transports ------------------------------------------------
-    def _route_sharded(self, out, T, budget, step_budget):
+    def _route_sharded(self, out, T, budget, step_budget, routed_in=None):
         sm, ck = _shard_map()
         axis, dp = self._axis, self._dp
         K_loc = self.K // dp
         L_loc = self.L // dp
         perm = [(d, (d + 1) % dp) for d in range(dp)]
         ring = self.plan.topology.kind == "ring"
+        use_fwd = routed_in is not None
         # local link -> local source chip is static (links are src-major
         # with one uniform out-link block per chip)
         lf_loc = (jnp.arange(L_loc) if ring
@@ -217,13 +263,25 @@ class InterChipRouter:
             st = jax.tree.map(exch_leaf, st)
             return st._replace(valid=st.valid.astype(bool))
 
-        def body(out_loc):
+        def body(out_loc, *rest):
             rank = jax.lax.axis_index(axis)
             l0 = rank * L_loc
             lsrc = jax.lax.dynamic_slice_in_dim(self.link_src, l0, L_loc)
             ldst = jax.lax.dynamic_slice_in_dim(self.link_dst, l0, L_loc)
             laddr = jax.lax.dynamic_slice_in_dim(self.link_addr, l0, L_loc)
             grids = self._link_grids(out_loc[:, lf_loc], lsrc, ldst)
+            n_fwd = None
+            if use_fwd:
+                fsrc = jax.lax.dynamic_slice_in_dim(self.fwd_src, l0, L_loc)
+                fdst = jax.lax.dynamic_slice_in_dim(self.fwd_dst, l0, L_loc)
+                fgrids = self._link_grids(rest[0][:, lf_loc], fsrc, fdst)
+                n_f, _ = self._census(fgrids)
+                n_fwd = jax.lax.psum(jnp.sum(n_f), axis)
+                grids = jnp.maximum(grids, fgrids)
+            # absolute link ids keep the flaky-drop hash identical to the
+            # local transport's
+            grids = finject.links(self.faults, grids,
+                                  l0 + jnp.arange(L_loc))
             n_loc, k_loc = self._census(grids)
             n = jax.lax.psum(jax.lax.dynamic_update_slice(
                 jnp.zeros((self.L,), jnp.int32), n_loc, (l0,)), axis)
@@ -267,26 +325,51 @@ class InterChipRouter:
                 routed_loc = compact()
             else:
                 routed_loc = jax.lax.cond(jnp.all(fits), compact, dense)
+            if use_fwd:
+                return routed_loc, n, fits, n_fwd
             return routed_loc, n, fits
 
-        fn = sm(body, mesh=self._mesh, in_specs=(self._spec_in,),
-                out_specs=(self._spec_in, self._spec_rep, self._spec_rep),
-                **ck)
-        return fn(out)
+        n_out = 4 if use_fwd else 3
+        in_specs = (self._spec_in,) * (2 if use_fwd else 1)
+        out_specs = (self._spec_in,) + (self._spec_rep,) * (n_out - 1)
+        fn = sm(body, mesh=self._mesh, in_specs=in_specs,
+                out_specs=out_specs, **ck)
+        res = fn(out, routed_in) if use_fwd else fn(out)
+        return res if use_fwd else (*res, None)
 
     # -- public API ----------------------------------------------------------
-    def route(self, out_spikes_t, telemetry=None):
+    def route(self, out_spikes_t, telemetry=None, routed_in=None):
         """[T, K, C] window output spikes -> ([T, K, R] delivery grid for
-        the NEXT window, updated telemetry)."""
+        the NEXT window, updated telemetry). ``routed_in`` (last window's
+        delivered grid) feeds the plan's forward rules — required for
+        failover plans, ignored when the plan has none."""
         T = out_spikes_t.shape[0]
         budget, step_budget = self._budgets(T)
+        if self.plan.n_forwards == 0:
+            routed_in = None
+        elif routed_in is None:
+            raise ValueError("this plan has forward rules: route() needs "
+                             "routed_in (last window's delivered grid)")
         if self._axis is not None:
-            routed, n, fits = self._route_sharded(out_spikes_t, T, budget,
-                                                  step_budget)
+            routed, n, fits, n_fwd = self._route_sharded(
+                out_spikes_t, T, budget, step_budget, routed_in)
         else:
-            routed, n, fits = self._route_local(out_spikes_t, T, budget,
-                                                step_budget)
-        return routed, obs_trace.count_links(telemetry, n, fits)
+            routed, n, fits, n_fwd = self._route_local(
+                out_spikes_t, T, budget, step_budget, routed_in)
+        telemetry = obs_trace.count_links(telemetry, n, fits)
+        telemetry = obs_trace.count_reroutes(telemetry, n_fwd)
+        return routed, obs_trace.count_faults(telemetry, self.faults)
+
+    def link_census(self, out_spikes_t):
+        """[L] delivered-event counts per link for one window of spikes —
+        the screening probe's observable. Includes the fault hook (what
+        the bus ACTUALLY delivers), excludes forward traffic and budget
+        gating (raw capacity census)."""
+        grids = self._link_grids(out_spikes_t[:, self.link_from],
+                                 self.link_src, self.link_dst)
+        grids = finject.links(self.faults, grids, np.arange(self.L))
+        n, _ = self._census(grids)
+        return n
 
     def merge(self, routed_ev, ext_ev, ext_addr):
         """Deliver last window's routed grid into this window's inputs.
@@ -297,7 +380,7 @@ class InterChipRouter:
         wins over the external address — deterministic and identical on
         every chip count, which is what the split-vs-monolithic contract
         needs."""
-        if self.plan.n_routes == 0:
+        if self.plan.n_deliveries == 0:
             return ext_ev, ext_addr
         ev = jnp.maximum(ext_ev, routed_ev)
         addr = jnp.where(routed_ev > 0.0, self.dst_addr,

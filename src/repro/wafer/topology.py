@@ -78,6 +78,15 @@ class WaferPlan:
     ``addr`` — the ``(t, row, addr, efficacy)`` record of the event bus.
     Routes are arrays (not per-pair tables) so arbitrary fan-out/fan-in
     is just more rows in the list.
+
+    FORWARD rules (``fwd_*``, normally empty) are the failover hop
+    ``reroute_plan`` emits around a blacklisted link: chip
+    ``fwd_src_chip`` re-transmits the events its OWN relay row
+    ``fwd_src_row`` received last window over the link to
+    ``fwd_dst_chip``, delivering into ``fwd_dst_row`` with ``fwd_addr``.
+    Forwarded traffic therefore arrives two windows after the source
+    spike (one normal hop + one relay hop) and is counted by the router
+    in the ``link_reroutes`` telemetry counter.
     """
     topology: WaferTopology
     n_rows: int                       # synapse rows per chip
@@ -87,6 +96,15 @@ class WaferPlan:
     dst_chip: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
     dst_row: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
     addr: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    fwd_src_chip: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    fwd_src_row: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    fwd_dst_chip: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    fwd_dst_row: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    fwd_addr: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
 
     def __post_init__(self):
         k, r, c = self.topology.n_chips, self.n_rows, self.n_cols
@@ -94,22 +112,52 @@ class WaferPlan:
                 self.addr)
         n = len(self.src_chip)
         assert all(len(a) == n for a in arrs), "ragged route arrays"
-        if n == 0:
-            return
-        assert (0 <= self.src_chip).all() and (self.src_chip < k).all()
-        assert (0 <= self.dst_chip).all() and (self.dst_chip < k).all()
-        assert (0 <= self.src_col).all() and (self.src_col < c).all()
-        assert (0 <= self.dst_row).all() and (self.dst_row < r).all()
-        assert (0 <= self.addr).all() and (self.addr < 64).all(), \
-            "event addresses are 6-bit"
+        farrs = (self.fwd_src_chip, self.fwd_src_row, self.fwd_dst_chip,
+                 self.fwd_dst_row, self.fwd_addr)
+        nf = len(self.fwd_src_chip)
+        assert all(len(a) == nf for a in farrs), "ragged forward arrays"
         links = set(self.topology.links())
-        used = set(zip(self.src_chip.tolist(), self.dst_chip.tolist()))
-        assert used <= links, f"routes use non-links: {sorted(used - links)}"
-        # a destination row is one physical driver: every route landing on
-        # it must deliver the same event address
-        key = self.dst_chip.astype(np.int64) * r + self.dst_row
+        if n:
+            assert (0 <= self.src_chip).all() and (self.src_chip < k).all()
+            assert (0 <= self.dst_chip).all() and (self.dst_chip < k).all()
+            assert (0 <= self.src_col).all() and (self.src_col < c).all()
+            assert (0 <= self.dst_row).all() and (self.dst_row < r).all()
+            assert (0 <= self.addr).all() and (self.addr < 64).all(), \
+                "event addresses are 6-bit"
+            used = set(zip(self.src_chip.tolist(), self.dst_chip.tolist()))
+            assert used <= links, \
+                f"routes use non-links: {sorted(used - links)}"
+        if nf:
+            assert (0 <= self.fwd_src_chip).all() \
+                and (self.fwd_src_chip < k).all()
+            assert (0 <= self.fwd_dst_chip).all() \
+                and (self.fwd_dst_chip < k).all()
+            assert (0 <= self.fwd_src_row).all() \
+                and (self.fwd_src_row < r).all()
+            assert (0 <= self.fwd_dst_row).all() \
+                and (self.fwd_dst_row < r).all()
+            assert (0 <= self.fwd_addr).all() and (self.fwd_addr < 64).all()
+            fused = set(zip(self.fwd_src_chip.tolist(),
+                            self.fwd_dst_chip.tolist()))
+            assert fused <= links, \
+                f"forwards use non-links: {sorted(fused - links)}"
+            # forwards re-transmit received traffic: the read row must be
+            # a route delivery target on the forwarding chip
+            rr = np.zeros((k, r), bool)
+            if n:
+                rr[self.dst_chip, self.dst_row] = True
+            assert rr[self.fwd_src_chip, self.fwd_src_row].all(), \
+                "forward reads a row no route delivers into"
+        if n + nf == 0:
+            return
+        # a destination row is one physical driver: every delivery landing
+        # on it (route or forward) must carry the same event address
+        dst_c = np.concatenate([self.dst_chip, self.fwd_dst_chip])
+        dst_r = np.concatenate([self.dst_row, self.fwd_dst_row])
+        dst_a = np.concatenate([self.addr, self.fwd_addr])
+        key = dst_c.astype(np.int64) * r + dst_r
         for g in np.unique(key):
-            a = self.addr[key == g]
+            a = dst_a[key == g]
             assert (a == a[0]).all(), \
                 f"conflicting addresses on dst row {divmod(int(g), r)}"
 
@@ -117,10 +165,19 @@ class WaferPlan:
     def n_routes(self) -> int:
         return len(self.src_chip)
 
+    @property
+    def n_forwards(self) -> int:
+        return len(self.fwd_src_chip)
+
+    @property
+    def n_deliveries(self) -> int:
+        return self.n_routes + self.n_forwards
+
     def relay_rows(self) -> np.ndarray:
-        """[K, R] bool — rows some route delivers into."""
+        """[K, R] bool — rows some delivery (route or forward) lands in."""
         m = np.zeros((self.topology.n_chips, self.n_rows), bool)
         m[self.dst_chip, self.dst_row] = True
+        m[self.fwd_dst_chip, self.fwd_dst_row] = True
         return m
 
     def dst_addr_grid(self) -> np.ndarray:
@@ -128,6 +185,7 @@ class WaferPlan:
         row receives; 0 on non-relay rows."""
         g = np.zeros((self.topology.n_chips, self.n_rows), np.int8)
         g[self.dst_chip, self.dst_row] = self.addr.astype(np.int8)
+        g[self.fwd_dst_chip, self.fwd_dst_row] = self.fwd_addr.astype(np.int8)
         return g
 
 
@@ -146,6 +204,9 @@ def monolithic_plan(plan: WaferPlan) -> WaferPlan:
     (chip-block-contiguous: global row = chip * R + row, global col =
     chip * C + col) and every route on the single self-link. Pair with
     ``monolithic_weights`` to build the block-diagonal synapse matrix."""
+    assert plan.n_forwards == 0, \
+        "monolithic embedding of forward rules is not defined (forwards " \
+        "deliver one window late by construction)"
     k, r, c = plan.topology.n_chips, plan.n_rows, plan.n_cols
     return WaferPlan(
         topology=WaferTopology(1, plan.topology.kind),
@@ -194,3 +255,104 @@ def s5_column_plan(n_chips: int, n_inputs: int, n_neurons: int,
             for d in range(n_chips):
                 routes.append((j // c_loc, j % c_loc, d, j % r, 63))
     return make_plan(WaferTopology(n_chips, kind), r, c_loc, routes)
+
+
+def reroute_plan(plan: WaferPlan, dead_links,
+                 relay_addr: int = 63) -> Tuple[WaferPlan, int]:
+    """Host-side failover around blacklisted links: every route riding a
+    dead ``(src_chip, dst_chip)`` pair is re-established over an
+    intermediate chip ``m`` with alive links, preferring REUSE of bus
+    traffic ``m`` already receives — if exactly one alive route delivers
+    this very ``(src_chip, src_col)`` spike train into relay row ``rho``
+    on ``m``, failover is just the forward rule ``(m, rho) -> (dst_chip,
+    dst_row)``; otherwise a fresh relay row is allocated on ``m`` (a row
+    no delivery touches — external drive on it is the caller's concern)
+    and both hops are added. A ring topology with no usable intermediate
+    is PROMOTED to all2all (the physical bus connects any pair; the ring
+    is a schedule, not a wire list) — the dead pair itself of course
+    stays dead. Forwarded events arrive one window later than the direct
+    route would have delivered them.
+
+    Returns ``(new_plan, n_rerouted)`` and raises ``ValueError`` when no
+    failover exists (K == 2, saturated relay rows, dead detours) —
+    degradation is never silent.
+    """
+    dead = {(int(s), int(d)) for s, d in dead_links}
+    if not dead:
+        return plan, 0
+    assert plan.n_forwards == 0, "reroute_plan expects an unrerouted plan"
+    K, R = plan.topology.n_chips, plan.n_rows
+    all_routes = list(zip(plan.src_chip.tolist(), plan.src_col.tolist(),
+                          plan.dst_chip.tolist(), plan.dst_row.tolist(),
+                          plan.addr.tolist()))
+    keep = [x for x in all_routes if (x[0], x[2]) not in dead]
+    bad = [x for x in all_routes if (x[0], x[2]) in dead]
+    if not bad:
+        return plan, 0
+
+    def attempt(kind):
+        topo = WaferTopology(K, kind)
+        alive = set(topo.links()) - dead
+        # delivery census over the surviving routes (dead-pair routes are
+        # dropped: they deliver nothing)
+        n_deliv = np.zeros((K, R), np.int64)
+        src_of = {}
+        for (s, c, d, row, a) in keep:
+            n_deliv[d, row] += 1
+            src_of[(d, row)] = (s, c)
+        # rows any delivery will touch: kept targets, the bad routes'
+        # targets (they become forward targets), plus fresh allocations
+        occupied = n_deliv > 0
+        for (_, _, d, row, _) in bad:
+            occupied[d, row] = True
+        bad_targets = {(d, row) for (_, _, d, row, _) in bad}
+        new_routes, fwd = list(keep), []
+        for (s, c, d, row, a) in bad:
+            hit = None
+            for (m, rho), sc in src_of.items():
+                if (sc == (s, c) and (m, d) in alive
+                        and n_deliv[m, rho] == 1
+                        and (m, rho) not in bad_targets):
+                    hit = (m, rho)
+                    break
+            if hit is None:
+                for m in range(K):
+                    if (m in (s, d) or (s, m) not in alive
+                            or (m, d) not in alive):
+                        continue
+                    free = np.nonzero(~occupied[m])[0]
+                    if free.size == 0:
+                        continue
+                    rho = int(free[0])
+                    occupied[m, rho] = True
+                    n_deliv[m, rho] += 1
+                    src_of[(m, rho)] = (s, c)
+                    new_routes.append((s, c, m, rho, relay_addr))
+                    hit = (m, rho)
+                    break
+            if hit is None:
+                return None
+            fwd.append((*hit, d, row, a))
+        rt = np.asarray(new_routes, np.int64).reshape(-1, 5)
+        fw = np.asarray(fwd, np.int64).reshape(-1, 5)
+        return WaferPlan(
+            topology=topo, n_rows=R, n_cols=plan.n_cols,
+            src_chip=rt[:, 0].astype(np.int32),
+            src_col=rt[:, 1].astype(np.int32),
+            dst_chip=rt[:, 2].astype(np.int32),
+            dst_row=rt[:, 3].astype(np.int32),
+            addr=rt[:, 4].astype(np.int32),
+            fwd_src_chip=fw[:, 0].astype(np.int32),
+            fwd_src_row=fw[:, 1].astype(np.int32),
+            fwd_dst_chip=fw[:, 2].astype(np.int32),
+            fwd_dst_row=fw[:, 3].astype(np.int32),
+            fwd_addr=fw[:, 4].astype(np.int32))
+
+    out = attempt(plan.topology.kind)
+    if out is None and plan.topology.kind == "ring":
+        out = attempt("all2all")
+    if out is None:
+        raise ValueError(
+            f"no failover for dead links {sorted(dead)}: "
+            f"{len(bad)} routes cannot be re-established")
+    return out, len(bad)

@@ -1,0 +1,550 @@
+"""Fault injection + defect tolerance (``repro.faults``).
+
+Four contracts:
+
+  1. OFF is free: ``faults=None`` is the identity on every hook — the
+     disabled program is the SAME jaxpr as before the subsystem existed,
+     on every backend, and outputs are bit-identical.
+  2. Injection is backend-consistent: the same ``FaultPlan`` produces
+     ``assert_array_equal``-identical spikes / rates / weights on
+     oracle, fused and blocked backends (dense and sparse synaptic
+     paths), and the independent NumPy reference models the same defect
+     realisation (playback co-simulation under faults).
+  3. Graceful degradation is exact: screening recovers the planted
+     sites, and emulating the faulted chip under its blacklist is
+     bit-identical to emulating the clean reduced network — provided
+     the blacklist covers the fault sites (the reduction dominates).
+  4. Link failover is accounted: a dead link's traffic re-arrives over
+     the reroute forwards exactly one window late, counted in
+     ``link_reroutes`` — and the §5 closed loop still learns once
+     screening + blacklisting run.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.bss2 import BSS2
+from repro.core.anncore import AnnCore
+from repro.core.ppu import VectorUnit
+from repro.faults import (Blacklist, FaultPlan, cadc_zero_code, chain,
+                          remap_link_faults, sample_fault_plan, screen,
+                          screen_chip, screen_links)
+from repro.obs import trace as obs_trace
+from repro.verif.mismatch import sample_instance
+from repro.wafer import (InterChipRouter, WaferTopology, make_plan,
+                         reroute_plan, s5_column_plan)
+
+R, C, T = 16, 8, 48
+BACKENDS = ("oracle", "fused", "blocked")
+
+
+def _cfg():
+    return dataclasses.replace(BSS2.reduced(), n_rows=R, n_cols=C)
+
+
+def _inst(cfg, prefix=()):
+    return sample_instance(cfg, jax.random.PRNGKey(0), prefix)
+
+
+def _events(key=1, p=0.25, t=T):
+    ev = (jax.random.uniform(jax.random.PRNGKey(key), (t, R)) < p
+          ).astype(jnp.float32)
+    return ev, jnp.zeros((t, R), jnp.int8)
+
+
+def _covered_plan(rng):
+    """A defect realisation whose every site lies on a row/column the
+    commissioning probes blacklist — the precondition of the exactness
+    contract (faults outside the blacklist legitimately change the
+    dynamics and cannot be masked away)."""
+    dead_rows = np.zeros(R, bool)
+    dead_rows[[2, 7, 11]] = True
+    hot = np.zeros(C, bool)
+    hot[1] = True
+    dead_n = np.zeros(C, bool)
+    dead_n[5] = True
+    badcol = hot | dead_n
+    sw_mask = np.zeros((R, C), bool)
+    sw_mask[dead_rows] = rng.random((3, C)) < 0.5
+    sw_mask[:, badcol] |= rng.random((R, 2)) < 0.5
+    sf = np.where(sw_mask, 1 << rng.integers(0, 6, (R, C)), 0)
+    return FaultPlan(
+        dead_rows=dead_rows, hot_neurons=hot, dead_neurons=dead_n,
+        stuck_w_mask=sw_mask,
+        stuck_w_val=rng.integers(0, 64, (R, C)).astype(np.int8),
+        cadc_stuck_mask=badcol,
+        cadc_stuck_code=rng.integers(0, 256, C).astype(np.int32),
+        store_flip=sf.astype(np.int32))
+
+
+class TestModel:
+    def test_plan_validation(self):
+        with pytest.raises(ValueError):
+            FaultPlan(stuck_w_mask=np.zeros((R, C), bool))  # no value
+        with pytest.raises(ValueError):
+            FaultPlan(cadc_stuck_code=np.zeros(C, np.int32))
+        with pytest.raises(AssertionError):
+            FaultPlan(stuck_w_mask=np.ones((R, C), bool),
+                      stuck_w_val=np.full((R, C), 64))      # 7-bit value
+        with pytest.raises(AssertionError):
+            FaultPlan(flaky_links=np.array([1.5]))
+
+    def test_chain_and_site_census(self):
+        fp = FaultPlan(dead_rows=np.eye(1, R, 3, dtype=bool)[0])
+        assert fp.total_sites == 1 and fp.n_dead_rows == 1
+        assert chain(None, None) is None
+        assert chain(fp) == (fp,)
+        assert chain(fp, (fp, None), None) == (fp, fp)
+        assert "dead_rows" in fp.summary()
+
+    def test_sample_plan_rates(self):
+        rng = np.random.default_rng(0)
+        fp = sample_fault_plan(256, 256, rng, p_dead_row=0.1,
+                               p_stuck_w=0.01, n_links=16, p_dead_link=0.5,
+                               p_flaky_link=0.5, flaky_drop=0.25)
+        assert 10 <= fp.n_dead_rows <= 45
+        assert fp.stuck_w_val is not None
+        # dead wins over flaky on the same link
+        assert not (fp.dead_links & (fp.flaky_links > 0)).any()
+
+    def test_remap_link_faults(self):
+        old = WaferTopology(3, "ring").links()
+        new = WaferTopology(3, "all2all").links()
+        fp = FaultPlan(dead_links=np.array([False, True, False]),
+                       flaky_links=np.array([0.5, 0.0, 0.0], np.float32))
+        fp2 = remap_link_faults(fp, old, new)
+        assert fp2.dead_links[new.index((1, 2))]
+        assert fp2.dead_links.sum() == 1
+        assert fp2.flaky_links[new.index((0, 1))] == np.float32(0.5)
+
+
+class TestOffPath:
+    """faults=None must be the SAME program, bit for bit."""
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("sparse", ("never", "always"))
+    def test_same_jaxpr_and_outputs(self, backend, sparse):
+        cfg = _cfg()
+        inst = _inst(cfg)
+        base = AnnCore(cfg, inst, backend=backend, sparse_mode=sparse)
+        off = AnnCore(cfg, inst, backend=backend, sparse_mode=sparse,
+                      faults=None)
+        st = base.init_state()
+        ev, ad = _events()
+        assert str(jax.make_jaxpr(base.run)(st, ev, ad)) == \
+            str(jax.make_jaxpr(off.run)(st, ev, ad))
+        s_a, o_a = jax.jit(base.run)(st, ev, ad)
+        s_b, o_b = jax.jit(off.run)(st, ev, ad)
+        np.testing.assert_array_equal(np.asarray(o_a["spikes"]),
+                                      np.asarray(o_b["spikes"]))
+        np.testing.assert_array_equal(np.asarray(s_a.rate_counters),
+                                      np.asarray(s_b.rate_counters))
+
+    def test_vector_unit_off_is_identity(self):
+        from repro.ppuvm import programs
+        cfg = _cfg()
+        inst = _inst(cfg)
+        core = AnnCore(cfg, inst)
+        st, _ = jax.jit(core.run)(core.init_state(), *_events())
+        words = jnp.asarray(programs.rstdp_program(eta=8.0))
+        base = VectorUnit(cfg, inst)
+        off = VectorUnit(cfg, inst, faults=None)
+        fn = lambda p: p.run_program_fixed(st, words)[0].syn.weights
+        assert str(jax.make_jaxpr(lambda: fn(base))()) == \
+            str(jax.make_jaxpr(lambda: fn(off))())
+
+    def test_router_off_is_identity(self):
+        plan = s5_column_plan(4, R // 2, 16)
+        base = InterChipRouter(plan)
+        off = InterChipRouter(plan, faults=None)
+        sp = (jax.random.uniform(jax.random.PRNGKey(2), (8, 4, 4)) < 0.4
+              ).astype(jnp.float32)
+        assert str(jax.make_jaxpr(base.route)(sp)) == \
+            str(jax.make_jaxpr(off.route)(sp))
+
+
+class TestInjection:
+    def test_backend_consistent(self):
+        cfg = _cfg()
+        inst = _inst(cfg)
+        rng = np.random.default_rng(0)
+        fp = sample_fault_plan(R, C, rng, p_dead_row=0.2, p_dead_neuron=0.2,
+                               p_hot_neuron=0.1, p_stuck_w=0.05, p_cadc=0.2)
+        ev, ad = _events()
+        outs = {}
+        for be in BACKENDS:
+            for sparse in ("never", "always"):
+                # full event capacity: "always" must not drop anything
+                c = AnnCore(cfg, inst, backend=be, sparse_mode=sparse,
+                            sparse_max_events=T * R, sparse_k_cap=R,
+                            faults=fp)
+                s, o = jax.jit(c.run)(c.init_state(), ev, ad)
+                outs[(be, sparse)] = (np.asarray(o["spikes"]),
+                                      np.asarray(s.rate_counters))
+        ref = outs[("oracle", "never")]
+        for k, (sp, rc) in outs.items():
+            np.testing.assert_array_equal(ref[0], sp, err_msg=str(k))
+            np.testing.assert_array_equal(ref[1], rc, err_msg=str(k))
+        # semantics: hot columns always fire, dead never; counters agree
+        sp, rc = ref
+        assert (sp[:, np.asarray(fp.hot_neurons)] == 1.0).all()
+        assert (sp[:, np.asarray(fp.dead_neurons)] == 0.0).all()
+        np.testing.assert_array_equal(rc, sp.sum(0))
+
+    def test_stuck_weights_analog_only(self):
+        """Stuck cells corrupt the crossbar READ; the stored digital
+        state (what the PPU reads back) is untouched."""
+        cfg = _cfg()
+        inst = _inst(cfg)
+        mask = np.zeros((R, C), bool)
+        mask[::2] = True
+        fp = FaultPlan(stuck_w_mask=mask,
+                       stuck_w_val=np.zeros((R, C), np.int8))
+        w0 = np.random.default_rng(1).integers(30, 60, (R, C)).astype(np.int8)
+        c = AnnCore(cfg, inst, faults=fp)
+        st = c.init_state()
+        st = st._replace(syn=st.syn._replace(weights=jnp.asarray(w0)))
+        st, out = jax.jit(c.run)(st, *_events())
+        np.testing.assert_array_equal(np.asarray(st.syn.weights), w0)
+        # all-even-rows-stuck-at-zero kills the excitatory drive entirely
+        assert np.asarray(out["spikes"]).sum() == 0
+
+    def test_cadc_and_store_hooks(self):
+        from repro.ppuvm import programs
+        cfg = _cfg()
+        inst = _inst(cfg)
+        off = np.full(C, 7, np.int32)
+        stuck = np.zeros(C, bool)
+        stuck[3] = True
+        code = np.full(C, 200, np.int32)
+        flip = np.zeros((R, C), np.int32)
+        flip[0, :] = 1
+        zero = np.zeros((R, C), bool)
+        zero[1, :] = True
+        fp = FaultPlan(cadc_code_offset=off, cadc_stuck_mask=stuck,
+                       cadc_stuck_code=code, store_flip=flip,
+                       store_zero=zero)
+        core = AnnCore(cfg, inst)
+        st, _ = jax.jit(core.run)(core.init_state(), *_events())
+        clean = VectorUnit(cfg, inst)
+        faulted = VectorUnit(cfg, inst, faults=fp)
+        qc0, _ = clean.read_correlation(st.corr)
+        qc1, _ = faulted.read_correlation(st.corr)
+        exp = np.clip(np.asarray(qc0) + 7, 0, 255)
+        exp[:, 3] = 200
+        np.testing.assert_array_equal(np.asarray(qc1), exp)
+        words = jnp.asarray(programs.rstdp_program(eta=0.0))  # dw == 0
+        w0 = np.asarray(st.syn.weights)
+        st2, _ = jax.jit(lambda s: faulted.run_program_fixed(s, words))(st)
+        w1 = np.asarray(st2.syn.weights)
+        np.testing.assert_array_equal(w1[0], w0[0] ^ 1)
+        np.testing.assert_array_equal(w1[1], np.zeros(C, np.int8))
+        np.testing.assert_array_equal(w1[2:], w0[2:])
+
+    def test_cosim_ref_models_same_faults(self):
+        """Playback co-simulation under a fault overlay: the independent
+        NumPy reference and the jitted machine model produce matching
+        traces for the SAME defect realisation."""
+        from repro.ppuvm import programs
+        from repro.verif import playback as pb
+        cfg = _cfg()
+        rng = np.random.default_rng(2)
+        fp = _covered_plan(rng)
+        # unambiguous pulse stimuli (see tests/test_playback.py: chaotic
+        # spiking diverges between two correct fp32 backends, so co-sim
+        # drives the DUT robustly suprathreshold)
+        w = np.full((R, C), 50, np.int8)
+        ev = np.zeros((120, R), np.float32)
+        ev[10] = 1.0
+        ev[60] = 1.0
+        ev[100, ::2] = 1.0
+        prog = [pb.write_weights(w), pb.inject(ev), pb.read_rates(),
+                pb.read_corr(), pb.read_v(),
+                pb.write_ppu_program(programs.rstdp_program(eta=8.0)),
+                pb.ppu_run(mod=rng.uniform(-1, 1, (2, C)).astype(np.float32)),
+                pb.read_weights()]
+        tf = pb.execute(prog, "fast", cfg, faults=fp)
+        tr = pb.execute(prog, "ref", cfg, faults=fp)
+        errs = pb.compare_traces(tf, tr, atol=0.05)
+        assert errs == [], "\n".join(errs)
+        # the faults visibly shaped the trace: dead rows kill their
+        # correlation columns vs a clean run
+        clean = pb.execute(prog, "fast", cfg)
+        (_, _, q_f), = [t for t in tf if t[1] == "CORR"][:1]
+        (_, _, q_c), = [t for t in clean if t[1] == "CORR"][:1]
+        assert not np.array_equal(q_f, q_c)
+
+
+class TestBlacklist:
+    def test_screening_recovers_planted_sites(self):
+        cfg = _cfg()
+        inst = _inst(cfg)
+        rng = np.random.default_rng(0)
+        fp = _covered_plan(rng)
+        bl = screen_chip(AnnCore(cfg, inst, faults=fp),
+                         VectorUnit(cfg, inst, faults=fp))
+        np.testing.assert_array_equal(bl.rows, np.asarray(fp.dead_rows))
+        np.testing.assert_array_equal(
+            bl.neurons,
+            np.asarray(fp.hot_neurons) | np.asarray(fp.dead_neurons))
+
+    def test_screening_clean_chip_is_empty(self):
+        cfg = _cfg()
+        inst = _inst(cfg)
+        bl = screen_chip(AnnCore(cfg, inst), VectorUnit(cfg, inst))
+        assert bl.total == 0
+
+    def test_cadc_zero_code(self):
+        cfg = _cfg()
+        inst = _inst(cfg)
+        core = AnnCore(cfg, inst)
+        ppu = VectorUnit(cfg, inst)
+        qc, qa = ppu.read_correlation(core.init_state().corr)
+        base = cadc_zero_code(inst, cfg.cadc_bits)
+        np.testing.assert_array_equal(
+            np.asarray(qc), np.broadcast_to(base, (R, C)))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_reduction_exactness(self, backend):
+        """Faulted chip under its blacklist == clean reduced network,
+        bit for bit, through emulation + a PPU-VM store."""
+        from repro.ppuvm import programs
+        cfg = _cfg()
+        inst = _inst(cfg)
+        rng = np.random.default_rng(3)
+        fp = _covered_plan(rng)
+        bl = screen_chip(AnnCore(cfg, inst, faults=fp),
+                         VectorUnit(cfg, inst, faults=fp))
+        red = bl.as_faults(inst, cfg.cadc_bits)
+        cov = bl.rows[:, None] | bl.neurons[None, :]
+        assert (~np.asarray(fp.stuck_w_mask) | cov).all()
+        words = jnp.asarray(programs.rstdp_program(eta=8.0))
+        w0 = jnp.asarray(rng.integers(0, 64, (R, C)), jnp.int8)
+        ev, ad = _events()
+
+        def run_with(ov):
+            c = AnnCore(cfg, inst, backend=backend, faults=ov)
+            p = VectorUnit(cfg, inst, faults=ov)
+            st = c.init_state()
+            st = st._replace(syn=st.syn._replace(weights=w0))
+            st, out = jax.jit(c.run)(st, ev, ad)
+            st2, _ = jax.jit(
+                lambda s: p.run_program_fixed(s, words))(st)
+            return (np.asarray(out["spikes"]),
+                    np.asarray(st.rate_counters),
+                    np.asarray(st2.syn.weights))
+
+        for x, y in zip(run_with(chain(fp, red)), run_with(chain(red))):
+            np.testing.assert_array_equal(x, y)
+
+    def test_reduction_counters(self):
+        cfg = _cfg()
+        inst = _inst(cfg)
+        rng = np.random.default_rng(3)
+        fp = _covered_plan(rng)
+        bl = screen_chip(AnnCore(cfg, inst, faults=fp),
+                         VectorUnit(cfg, inst, faults=fp))
+        ov = chain(fp, bl.as_faults(inst, cfg.cadc_bits))
+        c = AnnCore(cfg, inst, faults=ov)
+        tele = obs_trace.init_telemetry()
+        _, out = jax.jit(lambda s, e, a: c.run(s, e, a, telemetry=tele))(
+            c.init_state(), *_events())
+        s = obs_trace.summary(out["telemetry"])
+        assert s["faults_injected"] == fp.total_sites
+        assert s["faults_detected"] == bl.as_faults(inst).total_sites
+        assert s["blacklisted_rows"] == bl.n_rows == 3
+
+
+class TestLinkFailover:
+    def _sp(self, K, C_loc, t=8, key=0, p=0.4):
+        return (jax.random.uniform(jax.random.PRNGKey(key), (t, K, C_loc))
+                < p).astype(jnp.float32)
+
+    def test_dead_link_traffic_rearrives_and_is_counted(self):
+        plan = s5_column_plan(4, R // 2, 16)
+        dead = (0, 2)
+        p2, n_re = reroute_plan(plan, [dead])
+        assert n_re == 4 and p2.n_forwards == 4
+        assert p2.n_routes == plan.n_routes - 4
+        fp = FaultPlan(dead_links=np.array(
+            [sd == dead for sd in plan.topology.links()]))
+        r_clean = InterChipRouter(plan)
+        r_fail = InterChipRouter(p2, faults=fp)
+        sp1 = self._sp(4, 4)
+        silent = jnp.zeros_like(sp1)
+        tele = obs_trace.init_telemetry()
+        g1c, _ = r_clean.route(sp1)
+        g1f, tele = r_fail.route(sp1, tele, routed_in=r_fail.init_buffer(8))
+        g2f, tele = r_fail.route(silent, tele, routed_in=g1f)
+        g1c, g1f, g2f = map(np.asarray, (g1c, g1f, g2f))
+        missing = np.maximum(g1c[:, 2] - g1f[:, 2], 0.0)
+        assert missing.sum() > 0
+        # the dead link's deliveries re-arrive exactly one window late
+        np.testing.assert_array_equal(g2f[:, 2], missing)
+        s = obs_trace.summary(tele)
+        assert s["link_reroutes"] == int((missing > 0).sum())
+        assert s["faults_injected"] == 1
+
+    def test_route_requires_routed_in_on_failover_plans(self):
+        p2, _ = reroute_plan(s5_column_plan(4, R // 2, 16), [(0, 2)])
+        with pytest.raises(ValueError, match="routed_in"):
+            InterChipRouter(p2).route(self._sp(4, 4))
+
+    def test_ring_promotes_to_all2all(self):
+        topo = WaferTopology(3, "ring")
+        plan = make_plan(topo, 4, 2, [(0, 0, 1, 0, 7), (1, 1, 2, 1, 9),
+                                      (2, 0, 0, 2, 11)])
+        p2, n = reroute_plan(plan, [(1, 2)])
+        assert n == 1 and p2.topology.kind == "all2all"
+        assert p2.n_forwards == 1
+        # the relay hop rides alive links only
+        fl = (int(p2.fwd_src_chip[0]), int(p2.fwd_dst_chip[0]))
+        assert fl != (1, 2)
+
+    def test_reroute_raises_when_impossible(self):
+        plan = make_plan(WaferTopology(2, "all2all"), 4, 2,
+                         [(0, 0, 1, 0, 7)])
+        with pytest.raises(ValueError, match="no failover"):
+            reroute_plan(plan, [(0, 1)])
+
+    def test_flaky_link_drops_deterministically(self):
+        plan = s5_column_plan(2, R // 2, 16)
+        fl = np.zeros(len(plan.topology.links()), np.float32)
+        fl[0] = 0.5
+        fp = FaultPlan(flaky_links=fl, seed=4)
+        r = InterChipRouter(plan, faults=fp)
+        sp = jnp.ones((64, 2, 8), jnp.float32)
+        n1 = np.asarray(r.link_census(sp))
+        n2 = np.asarray(r.link_census(sp))
+        np.testing.assert_array_equal(n1, n2)
+        n_clean = np.asarray(InterChipRouter(plan).link_census(sp))
+        frac = n1[0] / n_clean[0]
+        assert 0.3 < frac < 0.7, frac
+        np.testing.assert_array_equal(n1[1:], n_clean[1:])
+
+    def test_screen_links_finds_dead_and_flaky(self):
+        plan = s5_column_plan(4, R // 2, 16)
+        links = plan.topology.links()
+        dl = np.array([sd == (0, 2) for sd in links])
+        fl = np.where([sd == (1, 3) for sd in links],
+                      np.float32(0.5), np.float32(0.0))
+        r = InterChipRouter(plan, faults=FaultPlan(dead_links=dl,
+                                                   flaky_links=fl))
+        assert set(screen_links(r)) == {(0, 2), (1, 3)}
+
+    def test_screen_full_pass_with_router(self):
+        cfg = _cfg()
+        inst = _inst(cfg)
+        plan = s5_column_plan(4, R // 2, 16)
+        dl = np.array([sd == (3, 1) for sd in plan.topology.links()])
+        fp = FaultPlan(dead_links=dl)
+        bl = screen(AnnCore(cfg, inst, faults=fp),
+                    VectorUnit(cfg, inst, faults=fp),
+                    router=InterChipRouter(plan, faults=fp))
+        assert bl.links == ((3, 1),)
+        assert bl.n_rows == 0 and bl.n_neurons == 0
+
+
+class TestClosedLoop:
+    """§5 R-STDP still learns under injected faults once screening and
+    blacklisting run (the paper's commissioning promise)."""
+
+    def test_recovery_under_faults(self):
+        from repro.core.hybrid import run_training
+        rng = np.random.default_rng(3)
+        fp = sample_fault_plan(32, 16, rng, p_dead_row=0.06,
+                               p_hot_neuron=0.25, p_cadc=0.12, seed=1)
+        assert fp.total_sites >= 3
+        n, tail = 200, 60
+
+        def trailing(mr, cols=slice(None)):
+            return float(np.mean(mr[-tail:, cols]))
+
+        out_c, _, _ = run_training(n_trials=n, seed=1)
+        out_f, _, meta = run_training(n_trials=n, seed=1, faults=fp)
+        bl = screen(meta["core"], meta["ppu"])
+        assert bl.total > 0
+        out_b, _, _ = run_training(n_trials=n, seed=1, faults=fp,
+                                   blacklist=bl)
+        healthy = ~bl.neurons
+        clean = trailing(out_c["mean_reward"])
+        naive = trailing(out_f["mean_reward"])
+        screened = trailing(out_b["mean_reward"], healthy)
+        # faults visibly degrade the naive all-column reward; after
+        # screening the healthy-column reward recovers to near-clean
+        assert naive < clean - 0.03, (naive, clean)
+        assert screened > naive + 0.03, (screened, naive)
+        assert screened > clean - 0.05, (screened, clean)
+
+    def test_wafer_blacklisted_link_reroutes_and_learns(self):
+        from repro.core.hybrid import run_training
+        bl = Blacklist(rows=np.zeros((4, 32), bool),
+                       neurons=np.zeros((4, 4), bool),
+                       links=((0, 2),))
+        out, state, meta = run_training(n_trials=120, seed=1, wafer=4,
+                                        telemetry=True, blacklist=bl)
+        assert meta["router"].plan.n_forwards == 4
+        tl = out["telemetry"]
+        assert int(tl["link_reroutes"]) > 0
+        # the rerouted wafer still learns: trailing reward beats the
+        # opening trials
+        mr = out["mean_reward"]
+        assert float(np.mean(mr[-30:])) > float(np.mean(mr[:30])) + 0.05
+
+
+def test_sharded_link_faults_match_local_subprocess():
+    """Link faults and failover forwards are bit-identical under the
+    local and shard_map transports (8 fake CPU devices)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from repro.wafer import s5_column_plan, reroute_plan, InterChipRouter
+from repro.faults import FaultPlan
+from repro.launch.mesh import make_smoke_mesh
+from repro.parallel.sharding import ShardingCtx
+from repro.obs import trace as obs
+
+ctx = ShardingCtx(mesh=make_smoke_mesh((4, 2)))
+plan = s5_column_plan(4, 8, 16)
+links = plan.topology.links()
+p2, _ = reroute_plan(plan, [(0, 2)])
+fl = np.where([sd == (1, 3) for sd in links], np.float32(0.5),
+              np.float32(0.0))
+fp = FaultPlan(dead_links=np.array([sd == (0, 2) for sd in links]),
+               flaky_links=fl, seed=4)
+sp = (jax.random.uniform(jax.random.PRNGKey(0), (16, 4, 4)) < 0.4
+      ).astype(jnp.float32)
+
+def windows(router):
+    tele = obs.init_telemetry()
+    routed = router.init_buffer(16)
+    outs = []
+    for _ in range(3):
+        routed, tele = jax.jit(router.route)(sp, tele, routed_in=routed)
+        outs.append(np.asarray(routed))
+    s = obs.summary(tele)
+    return outs, s["link_reroutes"], s["routed_events"]
+
+g_l, re_l, n_l = windows(InterChipRouter(p2, faults=fp))
+r_sh = InterChipRouter(p2, ctx=ctx, faults=fp)
+assert r_sh._axis == "data", r_sh._axis
+g_s, re_s, n_s = windows(r_sh)
+for a, b in zip(g_l, g_s):
+    np.testing.assert_array_equal(a, b)
+assert re_l == re_s and n_l == n_s and re_l > 0
+print("FAULT_SHARDED_OK", re_l, n_l)
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "FAULT_SHARDED_OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-3000:]

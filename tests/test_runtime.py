@@ -184,6 +184,37 @@ class TestServe:
         np.testing.assert_array_equal(out1, out2)
         assert (out1 < ARCH.vocab_padded).all()
 
+    def test_generate_rejects_kv_cache_overrun(self):
+        """prompt + prefix + n_new must fit max_len — past-the-end decode
+        positions would silently wrap/drop instead of erroring."""
+        from repro.models.transformer import prefix_len
+        from repro.serve.engine import ServeEngine
+        eng = ServeEngine(ARCH, max_len=16)
+        params = init_params(eng.bundle.decls, jax.random.PRNGKey(0))
+        prompts = jnp.ones((1, 8), jnp.int32)
+        fits = 16 - 8 - prefix_len(ARCH)
+        out = eng.generate(params, prompts, n_new=fits)
+        assert out.shape == (1, fits)
+        with pytest.raises(ValueError, match="overruns the KV cache"):
+            eng.generate(params, prompts, n_new=fits + 1)
+
+    def test_sampling_without_key_differs_per_call(self):
+        """temperature > 0 with key=None must not silently reuse one
+        PRNGKey(0) forever: repeated calls draw fresh samples, while an
+        explicit key stays reproducible."""
+        from repro.serve.engine import ServeEngine
+        eng = ServeEngine(ARCH, max_len=64)
+        params = init_params(eng.bundle.decls, jax.random.PRNGKey(0))
+        prompts = jnp.ones((4, 8), jnp.int32)
+        outs = [eng.generate(params, prompts, n_new=8, temperature=5.0)
+                for _ in range(3)]
+        assert any(not np.array_equal(outs[0], o) for o in outs[1:]), \
+            "key=None sampling repeated identical draws across calls"
+        k = jax.random.PRNGKey(7)
+        a = eng.generate(params, prompts, n_new=8, temperature=5.0, key=k)
+        b = eng.generate(params, prompts, n_new=8, temperature=5.0, key=k)
+        np.testing.assert_array_equal(a, b)
+
 
 def test_elastic_reshard_subprocess():
     """Checkpoint written under one mesh restores under another (8 fake
