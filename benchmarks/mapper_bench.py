@@ -1,0 +1,115 @@
+"""Network-mapper benchmarks: compile time, relay overhead, step ratio.
+
+Three rungs (recorded as the ``mapper`` suite, BENCH_pr10_mapper.json):
+
+* mapping time vs network size — the mapper is a host-side compiler
+  (partition + row allocation + routing + validation); it must stay
+  interactive even for beyond-native-fabric networks;
+* relay-row overhead vs recurrent fan-in on the ring topology — every
+  edge whose chip distance is 2 costs one forward rule and at most one
+  transit row (reuse makes it sublinear in edges);
+* mapped-vs-monolithic step-time ratio — the price of running the SAME
+  network split over K chips + router instead of one big virtual chip
+  (the bits are identical either way: tests/test_mapper.py).
+"""
+import time
+
+import numpy as np
+
+REPEATS = 5
+SIZES = ((100, 100), (200, 400), (300, 700))
+K = 4
+FAN_INS = (1, 2, 4, 6)
+W, T = 2, 64
+
+
+def _bench(fn, *args):
+    import jax
+    best = float("inf")
+    out = None
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run():
+    import jax.numpy as jnp
+
+    from repro import mapper
+
+    rng = np.random.default_rng(0)
+
+    # --- mapping time vs size (native 256x512 chips, all2all) -----------
+    # locality-structured fan-out (each input drives a contiguous
+    # neighborhood): unconstrained random graphs at 300x700 exceed the
+    # native 256-row budget per chip — locality is what makes
+    # beyond-fabric networks mappable, same as examples/map_network.py
+    mapping_time = []
+    for n_in, n_neurons in SIZES:
+        w_in = np.zeros((n_in, n_neurons), np.int32)
+        stride = max(1, n_neurons // n_in)
+        for i in range(n_in):
+            for d in range(4):
+                w_in[i, (i * stride + d) % n_neurons] = 30 - 5 * d
+        spec = mapper.NetworkSpec(n_in=n_in, n_neurons=n_neurons,
+                                  w_in=w_in)
+        best = float("inf")
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            m = mapper.map_network(spec, n_chips=K)
+            best = min(best, time.perf_counter() - t0)
+        rows = int((m.row_source >= 0).sum())
+        mapping_time.append(dict(n_in=n_in, n_neurons=n_neurons,
+                                 ms=round(best * 1e3, 1), rows_used=rows))
+        print(f"map {n_in}x{n_neurons} -> {K} chips: {best * 1e3:7.1f} ms, "
+              f"{rows} rows", flush=True)
+
+    # --- relay overhead vs recurrent fan-in (ring) -----------------------
+    # on the K=4 ring only chip distance 1 is a direct link; distance 2
+    # costs a relay. Allow exactly those distances so every extra unit of
+    # fan-in adds a realizable mix of direct and relayed edges.
+    n_in, n_neurons = 32, 64
+    block = n_neurons // K
+    chip_of = np.arange(n_neurons) // block
+    dist = (chip_of[None, :] - chip_of[:, None]) % K
+    rec_mask = (dist == 1) | (dist == 2)
+    relay = []
+    for f in FAN_INS:
+        spec = mapper.random_spec(rng, n_in, n_neurons, fan_out=2,
+                                  rec_fan_out=f, dale=True,
+                                  rec_mask=rec_mask)
+        m = mapper.map_network(spec, n_chips=K, chip_rows=256,
+                               chip_cols=block, topology="ring")
+        n_rec = int((spec.w_rec != 0).sum())
+        relay.append(dict(rec_fan_out=f, rec_edges=n_rec,
+                          relayed_edges=m.n_relayed_edges,
+                          transit_rows=m.n_transit_rows))
+        print(f"ring fan-in {f}: {n_rec:3d} rec edges, "
+              f"{m.n_relayed_edges:3d} relayed, "
+              f"{m.n_transit_rows:3d} transit rows", flush=True)
+
+    # --- mapped vs monolithic step time ----------------------------------
+    spec = mapper.random_spec(rng, 64, 128, fan_out=8, rec_fan_out=2,
+                              dale=True)
+    ev = jnp.asarray((rng.random((W, T, 64)) < 0.05).astype(np.float32))
+    step = {}
+    for label, n_chips, cols in (("monolithic", 1, 128), ("mapped", K, 32)):
+        rows = max(mapper.min_chip_rows(spec, n_chips, chip_cols=cols), 8)
+        m = mapper.map_network(spec, n_chips=n_chips, chip_rows=rows,
+                               chip_cols=cols)
+        rt = mapper.build_runtime(m)
+        rt.run(ev)                                   # compile
+        best, (_, out) = _bench(rt.run, ev)
+        step[label] = dict(us_per_window=round(best / W * 1e6, 1),
+                           spikes=int(np.asarray(out["spikes"]).sum()))
+        print(f"{label}: {step[label]['us_per_window']:8.1f} us/window",
+              flush=True)
+    ratio = step["mapped"]["us_per_window"] / step["monolithic"][
+        "us_per_window"]
+    print(f"mapped/monolithic step-time ratio: {ratio:.2f}x "
+          f"({K} chips + router vs one virtual chip)")
+    return dict(mapping_time=mapping_time, relay_overhead=relay,
+                step_time=step, mapped_over_monolithic=round(ratio, 2))

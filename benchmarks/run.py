@@ -19,6 +19,9 @@
   faults               defect-tolerance sweep: §5 reward vs injected
                        fault rate, naive vs screened+blacklisted, plus
                        the dead-link failover accounting
+  mapper               network-mapper compile time vs size, ring relay
+                       overhead vs fan-in, mapped-vs-monolithic
+                       step-time ratio
   roofline             §Roofline table from the dry-run artifacts
 
 Usage:
@@ -42,8 +45,8 @@ from repro.obs.report import jsonable as _jsonable
 def main() -> None:
     from benchmarks import (fig4_calibration, fig8_event_interface,
                             fig11_rstdp, step_time, faults_bench,
-                            kernels_bench, ppuvm_bench, roofline_table,
-                            telemetry_bench, wafer_bench)
+                            kernels_bench, mapper_bench, ppuvm_bench,
+                            roofline_table, telemetry_bench, wafer_bench)
     suites = [
         ("fig4_calibration", fig4_calibration.run),
         ("fig8_event_interface", fig8_event_interface.run),
@@ -54,6 +57,7 @@ def main() -> None:
         ("telemetry", telemetry_bench.run),
         ("wafer", wafer_bench.run),
         ("faults", faults_bench.run),
+        ("mapper", mapper_bench.run),
         ("roofline", roofline_table.run),
     ]
     ap = argparse.ArgumentParser()

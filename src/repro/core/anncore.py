@@ -212,6 +212,24 @@ class AnnCore:
         auto-initializes a fresh one iff the core was built with
         ``telemetry=True``, else telemetry is off and the emitted program
         is identical to the pre-telemetry one.
+
+        Args:
+          state: ``AnnCoreState`` carry (membranes, STP, correlation
+            accumulators, synapse array).
+          row_spikes_t: [T, ..., R] float driver events (0/1 before STP).
+          row_addr_t: [T, ..., R] int8 event addresses.
+          record_v: also return the membrane trace (costs memory).
+          unroll: dt-scan unroll override (``None`` = backend default).
+          telemetry: ``Telemetry`` pytree, or ``None`` (see above).
+
+        Returns:
+          ``(state, outputs)`` — outputs as documented above.
+
+        Contract pointers: the three backends are bit-identical
+        (tests/test_blocked.py), the dense/sparse synaptic routes are
+        bit-identical (tests/test_sparse.py), telemetry on/off is
+        bit-identical and off is the same jaxpr (tests/test_obs.py),
+        fault injection is backend-invariant (tests/test_faults.py).
         """
         from repro.obs import trace as obs_trace
         if telemetry is None and self.telemetry:
@@ -242,6 +260,24 @@ class AnnCore:
         the next window — the one-window bus-latency budget. With
         telemetry threading, the router's link census lands in the same
         ``outputs["telemetry"]`` pytree as the emulation counters.
+
+        Args:
+          state: per-chip ``AnnCoreState`` (instance prefix ``(K,)``).
+          routed_ev: [T, K, R] delivery grid from the previous window
+            (``router.empty_grid(T)`` for the first).
+          row_spikes_t / row_addr_t: [T, K, R] external events as in
+            ``run``.
+          router: an ``repro.wafer.InterChipRouter``.
+          record_v / unroll / telemetry: as in ``run``.
+
+        Returns:
+          ``(state, outputs)`` with ``outputs["routed"]`` the next
+          window's delivery grid.
+
+        Contract pointers: split == monolithic and transport
+        interchangeability live in tests/test_wafer.py; the mapper's
+        cross-K round trip (tests/test_mapper.py::TestExactness) runs
+        through this entry point via ``repro.wafer.router.run_windows``.
         """
         from repro.obs import trace as obs_trace
         if telemetry is None and self.telemetry:

@@ -89,7 +89,7 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
                     sparse_mode: str = None, sparse_threshold: float = None,
                     telemetry: bool = False, wafer: int = None,
                     wafer_topology: str = "all2all", wafer_relay: bool = True,
-                    wafer_ctx=None, link_budget: int = None,
+                    wafer_plan=None, wafer_ctx=None, link_budget: int = None,
                     link_mode: str = "auto", faults=None, blacklist=None):
     """Build the experiment closure set. Returns (init_fn, trial_fn, meta).
 
@@ -161,6 +161,52 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
     blacklisted LINKS re-route over an intermediate chip
     (``repro.wafer.topology.reroute_plan``; forwarded traffic is counted
     in the ``link_reroutes`` telemetry counter, never silent).
+
+    Args:
+      cfg: ``BSS2Config`` chip geometry; ``None`` derives the reduced
+        §5 geometry (``2*n_inputs`` rows x ``n_neurons`` cols) from
+        ``ecfg``.
+      ecfg: ``RSTDPConfig`` — the §5 experiment parameters (patterns,
+        trial length, learning rates).
+      instance_key: PRNG key for the virtual-instance mismatch draw
+        (``None`` = fixed default key).
+      prefix: instance-prefix shape for multi-instance fleets; must be
+        ``()`` in wafer mode (the prefix becomes ``(K,)``).
+      backend: "auto" | "oracle" | "fused" | "blocked" (see above).
+      kernel_impl: "auto" | "pallas" | "interpret" | "ref" kernel choice
+        for whichever backend runs.
+      rule_impl: "python" | "vm" (see above).
+      vm_executor: executor for ``rule_impl="vm"`` (see above).
+      block_size / trace_block / kernel_block: blocked-backend time
+        blocks (see above).
+      sparse_mode / sparse_threshold: event-sparse synaptic path gate
+        (see above).
+      telemetry: thread the jit-safe counter pytree (see above).
+      wafer: chip count K (``None`` = single chip).
+      wafer_topology: "all2all" | "ring" link graph for the built-in
+        §5 split.
+      wafer_relay: allow the §5 split's relay rows on ring topologies.
+      wafer_plan: explicit validated ``WaferPlan`` replacing the
+        built-in ``s5_column_plan`` — the ``repro.mapper`` integration
+        point; geometry must match ``(2*n_inputs, n_neurons/K)``.
+      wafer_ctx: ``ShardingCtx`` enabling shard_map link collectives.
+      link_budget / link_mode: router bus-budget knobs
+        (``repro.wafer.router.InterChipRouter``).
+      faults: ``FaultPlan`` defect injection (``None`` = same jaxpr).
+      blacklist: ``Blacklist`` graceful-degradation reduction.
+
+    Returns:
+      ``(init_fn, trial_fn, meta)`` — jit-ready init/trial closures and
+      a dict of host-side objects (core, ppu, router, plan, ...).
+
+    Contracts (each enforced by a tier-1 test — see docs/exactness.md):
+      backends bit-identical        tests/test_blocked.py
+      sparse path bit-identical     tests/test_sparse.py
+      VM executors bit-identical    tests/test_ppuvm_fuzz.py
+      telemetry on/off identical    tests/test_obs.py
+      split == monolithic           tests/test_wafer.py
+      faults=None same jaxpr        tests/test_faults.py
+      wafer_plan == built-in split  tests/test_mapper.py (TestHybridIntegration)
     """
     if cfg is None:
         cfg = dataclasses.replace(
@@ -175,8 +221,19 @@ def make_experiment(cfg: BSS2Config = None, ecfg: RSTDPConfig = RSTDPConfig(),
         c_loc = ecfg.n_neurons // K
         chip_cfg = dataclasses.replace(cfg, n_cols=c_loc)
         prefix = (K,)
-        plan = s5_column_plan(K, ecfg.n_inputs, ecfg.n_neurons,
-                              relay=wafer_relay, kind=wafer_topology)
+        if wafer_plan is not None:
+            # a mapper-built (or hand-built) placement replaces the
+            # hard-coded §5 column split — any validated WaferPlan with
+            # the experiment's per-chip geometry runs here
+            plan = wafer_plan
+            assert plan.topology.n_chips == K, \
+                f"wafer_plan is for {plan.topology.n_chips} chips, wafer={K}"
+            assert (plan.n_rows, plan.n_cols) == (2 * ecfg.n_inputs, c_loc), \
+                (f"wafer_plan geometry {(plan.n_rows, plan.n_cols)} != "
+                 f"{(2 * ecfg.n_inputs, c_loc)}")
+        else:
+            plan = s5_column_plan(K, ecfg.n_inputs, ecfg.n_neurons,
+                                  relay=wafer_relay, kind=wafer_topology)
     else:
         c_loc = ecfg.n_neurons
         chip_cfg = cfg
@@ -469,7 +526,7 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                  kernel_block: int = None, sparse_mode: str = None,
                  sparse_threshold: float = None, telemetry: bool = False,
                  wafer: int = None, wafer_topology: str = "all2all",
-                 wafer_relay: bool = True, wafer_ctx=None,
+                 wafer_relay: bool = True, wafer_plan=None, wafer_ctx=None,
                  link_budget: int = None, link_mode: str = "auto",
                  faults=None, blacklist=None):
     """Full §5 experiment. Returns the metrics history (stacked).
@@ -484,6 +541,31 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
     ``telemetry=True`` threads the jit-safe counter pytree through the
     whole run (bit-identical metrics either way) and returns the host
     summary under ``out["telemetry"]``.
+
+    Args:
+      n_trials: number of closed-loop trials to run.
+      ecfg / cfg: experiment / chip geometry configs (see
+        ``make_experiment``).
+      seed: derives both the mismatch instance key (``PRNGKey(seed)``)
+        and the run key (``PRNGKey(seed + 1)``).
+      fused / scan: execution mode (see Modes above).
+      backend, rule_impl, vm_executor, block_size, trace_block,
+      kernel_block, sparse_mode, sparse_threshold, telemetry, wafer,
+      wafer_topology, wafer_relay, wafer_plan, wafer_ctx, link_budget,
+      link_mode, faults, blacklist: forwarded verbatim to
+        ``make_experiment`` — every knob documented there (and in the
+        knob matrix of docs/architecture.md) applies here.
+
+    Returns:
+      ``(out, state, meta)``: ``out`` the stacked metrics history
+      (``reward``, ``w_signed_final``, optionally ``telemetry``),
+      ``state`` the final ``ExperimentState``, ``meta`` the
+      ``make_experiment`` host objects.
+
+    Contract pointers: tests/test_rstdp.py (learning curve),
+    tests/test_scan_path.py (fused/scan modes bit-identical),
+    tests/test_wafer.py (wafer=K trajectory == monolithic),
+    tests/test_mapper.py::TestHybridIntegration (explicit wafer_plan).
     """
     init, trial, meta = make_experiment(cfg=cfg, ecfg=ecfg,
                                         instance_key=jax.random.PRNGKey(seed),
@@ -497,6 +579,7 @@ def run_training(n_trials: int = 300, ecfg: RSTDPConfig = RSTDPConfig(),
                                         telemetry=telemetry, wafer=wafer,
                                         wafer_topology=wafer_topology,
                                         wafer_relay=wafer_relay,
+                                        wafer_plan=wafer_plan,
                                         wafer_ctx=wafer_ctx,
                                         link_budget=link_budget,
                                         link_mode=link_mode,

@@ -54,6 +54,15 @@ def synaptic_current(weights, addresses, row_events, event_addr, gain):
 # and the static sparse cost is O(T * k_cap * C) — 0.05 keeps that well
 # under the dense work while covering the ~4-5x regime at p <= 5%.
 SPARSE_THRESHOLD = 0.05
+# With ``const_addr`` the dense alternative is the once-resolved PLAIN
+# matmul — no [T, R, C] address-mask materialization — so the sparse
+# path must clear a lower bar before it wins. "auto" therefore sizes
+# its default capacities from this lower threshold when const_addr is
+# set: windows in the (0.02, 0.05] density band that used to route
+# sparse now overflow the tighter budget and take the (cheaper-here)
+# dense fallback. Regression:
+# tests/test_sparse.py::TestAutoGate::test_const_addr_lowers_crossover.
+SPARSE_THRESHOLD_CONST_ADDR = 0.02
 # Static work floor (T * R * C MACs): below it the dense matmul is so
 # cheap that packing overhead and the runtime branch can never pay off,
 # so sparse="auto" compiles to the pure dense program (keeps e.g. the
@@ -179,9 +188,13 @@ def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
                 ``max_events``/``k_cap``; overflow silently drops events
                 (see tests/test_sparse.py's divergence contract).
 
-    ``sparse_threshold`` (default ``SPARSE_THRESHOLD``) sizes the default
-    capacities: ``max_events`` ~ threshold * T * R total records and
-    ``k_cap`` per-step records, both overridable. ``impl`` selects the
+    ``sparse_threshold`` sizes the default capacities: ``max_events`` ~
+    threshold * T * R total records and ``k_cap`` per-step records, both
+    overridable. Its default is ``const_addr``-aware: ``SPARSE_THRESHOLD``
+    normally, the lower ``SPARSE_THRESHOLD_CONST_ADDR`` when the dense
+    alternative is the once-resolved plain matmul — the auto gate then
+    hands the (0.02, 0.05] density band back to dense, where the
+    const_addr matmul wins. ``impl`` selects the
     kernel implementation for whichever path runs (auto | pallas |
     interpret | ref). As convenience aliases, ``impl="dense"`` /
     ``impl="sparse"`` force the respective path with auto kernels.
@@ -219,7 +232,10 @@ def synaptic_current_window(weights, addresses, row_events_t, event_addr_t,
             return i
         return i, obs_trace.count_route(telemetry, sparse=False)
 
-    thr = SPARSE_THRESHOLD if sparse_threshold is None else sparse_threshold
+    if sparse_threshold is not None:
+        thr = sparse_threshold
+    else:
+        thr = SPARSE_THRESHOLD_CONST_ADDR if const_addr else SPARSE_THRESHOLD
     if max_events is None:
         max_events = events.default_max_events(T, R, thr)
     if k_cap is None:

@@ -54,7 +54,17 @@ class Blacklist:
     ``rows`` [.., R] / ``neurons`` [.., C] bool follow the core's
     instance-prefix shapes; ``links`` are (src_chip, dst_chip) pairs —
     topology-order-independent, so a reroute that re-indexes the link
-    space cannot invalidate them."""
+    space cannot invalidate them.
+
+    Two consumers:
+      * run-time reduction — ``as_faults`` masks the blacklisted fabric
+        exactly (tests/test_faults.py: faulted-under-blacklist ==
+        clean reduced network);
+      * compile-time avoidance — ``repro.mapper.map_network(...,
+        blacklist=)`` never places onto blacklisted rows/neurons/links,
+        so the mapped run equals the CLEAN monolithic run
+        (tests/test_mapper.py::TestExactness::test_blacklist_round_trip).
+    """
     rows: np.ndarray
     neurons: np.ndarray
     links: Tuple[Tuple[int, int], ...] = field(default_factory=tuple)
@@ -192,7 +202,29 @@ def screen_links(router, probe_steps: int = 32,
 def screen(core, ppu, router=None, probe_steps: int = 64,
            margin: int = 2, min_ratio: float = 0.95) -> Blacklist:
     """Full screening pass: chip probes plus (when a router is given)
-    the link census probe."""
+    the link census probe.
+
+    Runs the two commissioning probes (silent: hot neurons + corrupted
+    CADC columns; full-drive: dead neurons + dead driver rows) and,
+    with a router, a per-link bus census against the clean expectation.
+
+    Args:
+      core / ppu: the (possibly faulted) ``AnnCore`` and ``PPU`` to
+        probe — typically ``meta["core"]``/``meta["ppu"]`` from a
+        degraded ``run_training``.
+      router: optional ``InterChipRouter`` for the link census.
+      probe_steps: probe window length (links use ``min(., 32)``).
+      margin: CADC code tolerance before a column is flagged.
+      min_ratio: delivered/expected event ratio below which a link is
+        flagged.
+
+    Returns:
+      A ``Blacklist`` covering the detected rows/neurons/links.
+
+    Contract pointers: tests/test_faults.py (screening finds the
+    injected sites; reduction exactness), docs/wafer.md for the
+    end-to-end degraded -> screened -> recovered walkthrough.
+    """
     bl = screen_chip(core, ppu, probe_steps=probe_steps, margin=margin)
     if router is not None:
         links = screen_links(router, probe_steps=min(probe_steps, 32),

@@ -58,6 +58,38 @@ def _as_int(x, dtype):
 
 @dataclass(frozen=True)
 class FaultPlan:
+    """One realisation of silicon defects, host-built numpy.
+
+    A plan is closed over as trace-time constants and threads one knob
+    through every layer (``AnnCore``, ``VectorUnit``,
+    ``InterChipRouter``, ``playback.execute``,
+    ``make_experiment``/``run_training`` — see docs/wafer.md). ``None``
+    fields are absent defects and compile to the identity: a run with
+    ``faults=None`` is the SAME jaxpr as before the subsystem existed.
+
+    Args:
+      dead_rows: [.., R] bool — drivers that never forward events.
+      hot_neurons / dead_neurons: [.., C] bool — output drivers stuck
+        firing / never asserting.
+      stuck_w_mask / stuck_w_val: [.., R, C] — 6-bit SRAM cells stuck
+        at a value, applied at the ANALOG read only (the PPU's digital
+        readback is unaffected).
+      cadc_stuck_mask / cadc_stuck_code / cadc_code_offset: [.., C] —
+        CADC columns returning a stuck code / an additive code error.
+      store_flip / store_zero: [.., R, C] — bit planes XORed into every
+        PPU weight store / store cells forced to zero.
+      dead_links: [L] bool — bus links carrying nothing.
+      flaky_links: [L] float32 — per-link deterministic event-drop
+        fraction (hash-selected with ``seed``).
+      seed: the flaky-drop hash seed.
+      is_blacklist: marks a ``Blacklist.as_faults`` reduction overlay
+        (telemetry reports it under ``faults_detected``).
+
+    Contract pointers: tests/test_faults.py (``faults=None`` same
+    jaxpr; injection bit-identical across backends and synaptic paths;
+    blacklist reduction exact).
+    """
+
     dead_rows: Optional[np.ndarray] = None        # [.., R] bool
     hot_neurons: Optional[np.ndarray] = None      # [.., C] bool
     dead_neurons: Optional[np.ndarray] = None     # [.., C] bool

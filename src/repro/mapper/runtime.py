@@ -1,0 +1,219 @@
+"""Run a mapped network: K-invariant instances, input placement, spike
+gathering, and the routed window scan.
+
+The cross-K bit-exactness contract (mapped K chips ==
+``assert_array_equal`` == the K=1 monolithic mapping) needs every
+physical quantity that enters the dynamics to be a *pure function of the
+spec*, scattered — not resampled — onto whatever chip layout the mapper
+chose:
+
+  * ``sample_network_instance`` draws the analog mismatch realisation at
+    SPEC shapes — per-neuron ``[n_neurons]`` columns, per-source
+    ``[n_sources]`` rows — so the draw is independent of K;
+  * ``scatter_instance`` places those draws at each neuron's
+    ``(chip, column)`` and each source's driver rows (replicated rows of
+    one source share the row parameters: they see the same event train,
+    so their STP efficacy trajectories are bit-identical replicas);
+    unmapped rows/columns keep the ideal nominal values — they carry
+    zero weight and never spike, so they are exact-zero terms;
+  * ``place_inputs`` writes each external input's event train onto its
+    driver rows on every chip; recurrent traffic rides the router with
+    the one-window bus latency — ON EVERY CHIP COUNT, including K=1
+    (the self-link), which is what makes the latency K-invariant.
+
+Contract test: ``tests/test_mapper.py::TestExactness`` (K in {1, 2, 4},
+fused + blocked backends, ring + all2all, with and without a blacklist).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.bss2 import BSS2, BSS2Config
+from repro.core.anncore import AnnCore
+from repro.mapper.mapping import ChipMapping
+from repro.mapper.spec import NetworkSpec
+from repro.verif.mismatch import ideal_instance, sample_instance
+from repro.wafer.router import InterChipRouter, run_windows
+
+
+def sample_network_instance(spec: NetworkSpec, key,
+                            cfg: Optional[BSS2Config] = None) -> dict:
+    """Mismatch realisation at spec shapes (K-independent).
+
+    Args:
+      spec: the network; draws are per-neuron (``[n_neurons]`` leaves)
+        and per-source (``[n_sources]`` leaves).
+      key: PRNG key — the identity of the virtual silicon; the same key
+        always yields the same instance, on any chip count.
+      cfg: mismatch magnitudes (default ``BSS2.reduced()``).
+
+    Returns: the ``sample_instance`` dict with rows = sources and
+      columns = neurons.
+    """
+    cfg = cfg or BSS2.reduced()
+    scfg = dataclasses.replace(cfg, n_rows=max(spec.n_sources, 1),
+                               n_cols=spec.n_neurons)
+    return sample_instance(scfg, key, ())
+
+
+def scatter_instance(mapping: ChipMapping, net_inst: dict,
+                     cfg: BSS2Config) -> dict:
+    """Spec-shaped draws -> per-chip ``(K,)``-prefix instance planes.
+
+    Neuron j's column parameters land at ``(col_chip[j], col_slot[j])``;
+    source s's row parameters land on every driver row allocated for s
+    (all replicas share them). Unmapped slots keep ideal values.
+    """
+    K = mapping.n_chips
+    chip_cfg = dataclasses.replace(cfg, n_rows=mapping.chip_rows,
+                                   n_cols=mapping.chip_cols)
+    base = jax.tree.map(np.array, ideal_instance(chip_cfg, (K,)))
+    part = mapping.part
+    ks, rs = np.nonzero(mapping.row_source >= 0)
+    srcs = mapping.row_source[ks, rs]
+
+    def cols(dst, src):
+        dst[part.col_chip, part.col_slot] = np.asarray(src)
+        return dst
+
+    def rows(dst, src):
+        dst[ks, rs] = np.asarray(src)[srcs]
+        return dst
+
+    out = dict(
+        neuron_params={k: cols(base["neuron_params"][k], v)
+                       for k, v in net_inst["neuron_params"].items()},
+        weight_gain=cols(base["weight_gain"], net_inst["weight_gain"]),
+        stp_offset=rows(base["stp_offset"], net_inst["stp_offset"]),
+        stp_calib=rows(base["stp_calib"], net_inst["stp_calib"]),
+        cadc_offset=cols(base["cadc_offset"], net_inst["cadc_offset"]),
+        cadc_gain=cols(base["cadc_gain"], net_inst["cadc_gain"]))
+    return jax.tree.map(jnp.asarray, out)
+
+
+def place_inputs(mapping: ChipMapping, ev_in):
+    """[..., T, n_in] external event trains -> ([..., T, K, R] events,
+    [..., T, K, R] int8 addresses) ready for ``run_windows``.
+
+    Every driver row's address plane is its schedule address — constant
+    per row, so the merged (external | routed) stream satisfies the
+    ``const_addr`` promise.
+    """
+    ev_in = np.asarray(ev_in, np.float32)
+    K, R = mapping.n_chips, mapping.chip_rows
+    lead = ev_in.shape[:-1]
+    ev = np.zeros((*lead, K, R), np.float32)
+    rows = mapping.input_rows()
+    if rows:
+        ks = np.asarray([k for k, _, _ in rows])
+        rs = np.asarray([r for _, r, _ in rows])
+        ss = np.asarray([s for _, _, s in rows])
+        ev[..., ks, rs] = ev_in[..., ss]
+    ad = np.broadcast_to(mapping.row_addr.astype(np.int8), ev.shape)
+    return jnp.asarray(ev), jnp.asarray(np.ascontiguousarray(ad))
+
+
+def gather_spikes(mapping: ChipMapping, spikes):
+    """[..., K, C] per-chip output planes -> [..., n_neurons] spec-order
+    spike trains (drops unused columns)."""
+    part = mapping.part
+    return spikes[..., part.col_chip, part.col_slot]
+
+
+@dataclass
+class MappedRuntime:
+    """A ``ChipMapping`` bound to executable machinery.
+
+    ``core`` is the K-chip ``AnnCore`` fleet (instance prefix ``(K,)``),
+    ``router`` the plan's ``InterChipRouter``; ``net_inst`` the
+    spec-shaped mismatch draw the per-chip ``inst`` was scattered from
+    (reuse it to build the monolithic reference of the SAME silicon).
+    """
+    mapping: ChipMapping
+    chip_cfg: BSS2Config
+    core: AnnCore
+    router: InterChipRouter
+    net_inst: dict
+    inst: dict
+
+    def init_state(self):
+        """Fleet state with the mapped weight/address planes loaded."""
+        st = self.core.init_state((self.mapping.n_chips,))
+        return st._replace(syn=st.syn._replace(
+            weights=jnp.asarray(self.mapping.weights),
+            addresses=jnp.asarray(self.mapping.addresses)))
+
+    def run(self, ev_in, telemetry=None, state=None):
+        """Emulate W windows of a [W, T, n_in] external stimulus.
+
+        Returns ``(state, out)`` where ``out["spikes"]`` is the
+        [W, T, n_neurons] spec-order spike record (``out["chip_spikes"]``
+        keeps the raw [W, T, K, C] planes; routed grid and telemetry as
+        in ``run_windows``).
+        """
+        ev, ad = place_inputs(self.mapping, ev_in)
+        if state is None:
+            state = self.init_state()
+        if telemetry is None and self.core.telemetry:
+            # init before the scan: the carry structure must be fixed,
+            # so the core's lazy auto-init inside the body cannot apply
+            from repro.obs import trace as obs_trace
+            telemetry = obs_trace.init_telemetry()
+        state, out = jax.jit(
+            lambda s, e, a: run_windows(self.core, self.router, s, e, a,
+                                        telemetry=telemetry))(state, ev, ad)
+        out["chip_spikes"] = out["spikes"]
+        out["spikes"] = gather_spikes(self.mapping, out["chip_spikes"])
+        return state, out
+
+
+def build_runtime(mapping: ChipMapping, cfg: Optional[BSS2Config] = None,
+                  instance_key=None, net_inst: Optional[dict] = None,
+                  backend: str = "fused", kernel_impl: str = "auto",
+                  const_addr: bool = True, sparse_mode: Optional[str] = None,
+                  ctx=None, link_budget: Optional[int] = None,
+                  link_mode: str = "auto", faults=None,
+                  telemetry: bool = False) -> MappedRuntime:
+    """Bind a ``ChipMapping`` to an ``AnnCore`` fleet + router.
+
+    Args:
+      mapping: the compiled placement (``map_network``).
+      cfg: base chip config (default ``BSS2.reduced()``); its row/column
+        counts are replaced by the mapping's chip geometry.
+      instance_key: PRNG key for the spec-shaped mismatch draw (default
+        ``PRNGKey(7)``); ignored when ``net_inst`` is given.
+      net_inst: a ``sample_network_instance`` result to reuse — pass the
+        SAME draw to the K-chip and monolithic runtimes to emulate the
+        same virtual silicon on both.
+      backend / kernel_impl / sparse_mode / telemetry: forwarded to
+        ``AnnCore`` (see its docstring).
+      const_addr: the mapper's address schedule stores one address per
+        driver row, so the fused path may resolve the address-match mask
+        once per window — on by default.
+      ctx / link_budget / link_mode / faults: forwarded to
+        ``InterChipRouter``.
+
+    Returns: a ``MappedRuntime``.
+    """
+    cfg = cfg or BSS2.reduced()
+    chip_cfg = dataclasses.replace(cfg, n_rows=mapping.chip_rows,
+                                   n_cols=mapping.chip_cols)
+    if net_inst is None:
+        if instance_key is None:
+            instance_key = jax.random.PRNGKey(7)
+        net_inst = sample_network_instance(mapping.spec, instance_key, cfg)
+    inst = scatter_instance(mapping, net_inst, cfg)
+    kw = {} if sparse_mode is None else {"sparse_mode": sparse_mode}
+    core = AnnCore(chip_cfg, inst, backend=backend, kernel_impl=kernel_impl,
+                   const_addr=const_addr, telemetry=telemetry, faults=faults,
+                   **kw)
+    router = InterChipRouter(mapping.plan, ctx=ctx, link_budget=link_budget,
+                             link_mode=link_mode, faults=faults)
+    return MappedRuntime(mapping=mapping, chip_cfg=chip_cfg, core=core,
+                         router=router, net_inst=net_inst, inst=inst)

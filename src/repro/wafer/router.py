@@ -80,6 +80,26 @@ class InterChipRouter:
     each forwarding chip re-transmits the events its relay row received,
     so rerouted traffic lands one window after the direct route would
     have — and is counted in the ``link_reroutes`` telemetry counter.
+
+    Args:
+      plan: a validated ``WaferPlan`` (route + forward tables become
+        constant index arrays at construction).
+      ctx: optional ``ShardingCtx`` (see above).
+      link_budget / link_step_budget: compact-transport capacities
+        (see above).
+      link_mode: "auto" | "compact" | "dense" (see above).
+      faults: ``FaultPlan`` link overlay, or ``None`` (see above).
+
+    Per window, ``route(out_spikes_t, telemetry=, routed_in=)`` turns
+    [T, K, C] spikes into the next window's [T, K, R] delivery grid and
+    ``merge(routed_ev, ext_ev, ext_addr)`` folds a delivery grid into
+    the external inputs (scatter-max — order-independent because routed
+    and external events on one row carry the same address).
+
+    Contract pointers: tests/test_wafer.py (split == monolithic,
+    overflow counted never silent, transports interchangeable),
+    tests/test_faults.py (link faults), tests/test_mapper.py (mapper
+    round trips run every window through this router).
     """
 
     def __init__(self, plan: WaferPlan, ctx=None,

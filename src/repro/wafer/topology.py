@@ -40,6 +40,14 @@ class WaferTopology:
       "all2all"  every ordered pair INCLUDING self-links (the wafer bus
                  loops back on-chip), exchanged with a masked
                  ``all_gather`` — arbitrary fan-in.
+
+    Args:
+      n_chips: K >= 1 logical chips.
+      kind: "ring" | "all2all" (see above).
+
+    Contract pointers: link-order and transport invariants in
+    tests/test_wafer.py; the mapper consumes ``links()`` to decide
+    direct-vs-relay routing (tests/test_mapper.py).
     """
     n_chips: int
     kind: str = "ring"
@@ -86,7 +94,26 @@ class WaferPlan:
     ``fwd_dst_chip``, delivering into ``fwd_dst_row`` with ``fwd_addr``.
     Forwarded traffic therefore arrives two windows after the source
     spike (one normal hop + one relay hop) and is counted by the router
-    in the ``link_reroutes`` telemetry counter.
+    in the ``link_reroutes`` telemetry counter. The network mapper
+    (``repro.mapper``) emits the same rules for ring edges with no
+    direct link — one transit row + one forward per relayed edge.
+
+    Args:
+      topology: the ``WaferTopology`` the routes ride on.
+      n_rows / n_cols: per-chip synapse-row / neuron-column geometry.
+      src_chip, src_col, dst_chip, dst_row, addr: parallel int32 route
+        arrays — spikes of ``(src_chip, src_col)`` become events on
+        ``(dst_chip, dst_row)`` carrying ``addr``.
+      fwd_*: parallel forward-rule arrays (see above; normally empty).
+
+    Validation (``__post_init__``) rejects out-of-range indices, routes
+    over links the topology does not have, duplicate or conflicting
+    addresses on one destination row, and forwards reading rows no
+    route delivers into — a plan that constructs is executable.
+
+    Contract pointers: tests/test_wafer.py (split == monolithic,
+    failover), tests/test_mapper.py (mapper-emitted plans validate and
+    round-trip).
     """
     topology: WaferTopology
     n_rows: int                       # synapse rows per chip
